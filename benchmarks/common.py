@@ -1,0 +1,31 @@
+"""Shared benchmark scaffolding: timed rows in ``name,us_per_call,derived``
+CSV format (one function per paper table/figure)."""
+from __future__ import annotations
+
+import contextlib
+import os
+import tempfile
+import time
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+
+
+@contextlib.contextmanager
+def timed(name: str, derived_fn=lambda: ""):
+    t0 = time.perf_counter()
+    yield
+    us = (time.perf_counter() - t0) * 1e6
+    emit(name, us, derived_fn())
+
+
+def source_root() -> str:
+    root = os.environ.get("OVERLORD_BENCH_ROOT",
+                          os.path.join(tempfile.gettempdir(),
+                                       "overlord_bench_sources"))
+    os.makedirs(root, exist_ok=True)
+    return root

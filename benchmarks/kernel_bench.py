@@ -1,0 +1,56 @@
+"""Kernel-level evidence that packing layout changes attention cost:
+the segment-aware kernel skips dead (Q, KV) tiles, so one 512-token doc
+costs ~10 live causal tiles while 4x128-token docs cost only the 4
+diagonal tiles.  Run in interpret mode (CPU container); tile-skip ratios
+are architecture-independent and carry to TPU.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.kernels.packed_attention import packed_flash_attention
+
+
+def live_tiles(seg, block=128, causal=True):
+    s = len(seg)
+    n = s // block
+    live = 0
+    for iq in range(n):
+        for ik in range(n):
+            if causal and ik > iq:
+                continue
+            qs = seg[iq * block:(iq + 1) * block]
+            ks = seg[ik * block:(ik + 1) * block]
+            if qs.max() >= ks.min() and ks.max() >= qs.min() \
+                    and qs.max() > 0 and ks.max() > 0:
+                live += 1
+    return live
+
+
+def run():
+    b, h, s, d = 1, 2, 1024, 128
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.float32)
+    layouts = {
+        "one_1024tok_doc": np.ones((b, s), np.int32),
+        "eight_128tok_docs": np.repeat(
+            np.arange(1, 9, dtype=np.int32), 128)[None].repeat(b, 0),
+    }
+    for name, seg in layouts.items():
+        packed_flash_attention(q, q, q, seg, seg)  # warmup
+        t0 = time.perf_counter()
+        packed_flash_attention(q, q, q, seg, seg)
+        dt = time.perf_counter() - t0
+        lt = live_tiles(seg[0])
+        total_tiles = (s // 128) * (s // 128 + 1) // 2
+        emit(f"kernel.segment_skip.{name}", dt * 1e6,
+             f"live_tiles={lt}/{total_tiles};cost_model_sum_l2="
+             f"{sum(int((seg[0] == i).sum()) ** 2 for i in range(1, seg.max() + 1))}")
+
+
+if __name__ == "__main__":
+    run()

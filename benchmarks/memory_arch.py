@@ -1,0 +1,76 @@
+"""Fig. 12 analog: memory + fetch overhead, OVERLORD vs colocated loader.
+
+Paper setup: Llama-12B + ViT-2B on 288/576 GPUs, navit-100 sources.  We
+scale ranks to DP groups (paper: 16 GPUs/node, TP=4 x PP=4 -> DP=18/36
+data consumers) and measure RESIDENT bytes of both architectures, plus
+OVERLORD-auto (source auto-partitioning) vs OVERLORD-vanilla (one loader
+per source).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, source_root, timed
+from repro.configs import get_config
+from repro.core import (
+    ClientPlaceTree, Overlord, OverlordConfig, StaticSchedule,
+)
+from repro.core.autoscale import PartitionLimits
+from repro.core.colocated import ColocatedFleet
+from repro.data.cost_models import backbone_cost
+from repro.data.sources import materialize_group, navit_like_specs
+import dataclasses
+
+
+def _paths(n_sources: int):
+    specs = [dataclasses.replace(s, n_samples=128)
+             for s in navit_like_specs(n_sources)]
+    return materialize_group(specs, source_root())
+
+
+def run(n_sources: int = 48):
+    paths = _paths(n_sources)
+    cfg = get_config("paper-llama-12b")
+    sched = StaticSchedule({n: 1.0 for n in paths})
+    for gpus, dp in (("288gpu", 18), ("576gpu", 36)):
+        tree = ClientPlaceTree([("PP", 1), ("DP", dp), ("CP", 1),
+                                ("TP", 1)])
+        results = {}
+        for mode in ("auto", "vanilla"):
+            ov = Overlord(paths, tree, sched, OverlordConfig(
+                seq_len=1024, rows_per_microbatch=1, n_bins=1,
+                strategy="backbone_balance",
+                strategy_params=dict(costfn=backbone_cost(cfg),
+                                     broadcast=()),
+                shadows=False, buffer_target=32,
+                auto_partition=(mode == "auto"),
+                limits=PartitionLimits(total_workers=dp * 2, w_actor=2),
+            )).start()
+            try:
+                import time
+                fetch = []
+                for step in range(3):
+                    t0 = time.perf_counter()
+                    for r in range(tree.world):
+                        ov.get_batch(step, r)
+                    fetch.append(time.perf_counter() - t0)
+                    ov.step_done(step)
+                results[mode] = (ov.memory_report()["total_ex_shadows"],
+                                 float(np.mean(fetch[1:])))
+            finally:
+                ov.shutdown()
+        # colocated: every DP rank opens all sources with sized workers
+        fleet = ColocatedFleet(paths, dp, workers=4, seq_len=1024, rows=1,
+                               schedule=sched)
+        co_mem = fleet.memory_bytes()
+        fleet.close()
+        for mode, (mem, fetch_s) in results.items():
+            emit(f"fig12.memory.{gpus}.overlord_{mode}", fetch_s * 1e6,
+                 f"mem_mb={mem / 1e6:.2f};"
+                 f"reduction_vs_colocated={co_mem / max(mem, 1):.2f}x")
+        emit(f"fig12.memory.{gpus}.colocated", 0.0,
+             f"mem_mb={co_mem / 1e6:.2f};reduction_vs_colocated=1.00x")
+
+
+if __name__ == "__main__":
+    run()

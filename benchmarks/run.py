@@ -1,0 +1,55 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark driver — one section per paper exhibit (DESIGN.md §6):
+
+  Fig. 2/3   imbalance.run              skew + FLOP imbalance
+  Fig. 13    orchestration.run(+real)   vanilla/backbone/hybrid speedups
+  Fig. 12    memory_arch.run            memory vs colocated (288/576 GPU)
+  Fig. 14/A  parallelism_redundancy.run simulated-backend redundancy
+  Fig. 15    source_parallel.run        source-partitioning memory
+  Fig. 16    fault_tolerance.run        planner/loader failure latency
+  App. B     constructor_scaling.run    constructor fan-in at scale
+  kernels    kernel_bench.run           segment-skip tile evidence
+  roofline   roofline.run               dry-run roofline terms
+"""
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    sections = []
+    from benchmarks import (
+        constructor_scaling, fault_tolerance, imbalance, kernel_bench,
+        memory_arch, orchestration, parallelism_redundancy, roofline,
+        source_parallel,
+    )
+    sections = [
+        ("fig2/3", imbalance.run),
+        ("fig13", orchestration.run),
+        ("fig13-real", orchestration.run_real_compute),
+        ("fig12", memory_arch.run),
+        ("fig14/A", parallelism_redundancy.run),
+        ("fig15", source_parallel.run),
+        ("fig16", fault_tolerance.run),
+        ("appB", constructor_scaling.run),
+        ("kernels", kernel_bench.run),
+        ("roofline", roofline.run),
+    ]
+    failed = []
+    for name, fn in sections:
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+        print(f"section.{name},{(time.time() - t0) * 1e6:.0f},elapsed",
+              flush=True)
+    if failed:
+        print(f"FAILED sections: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

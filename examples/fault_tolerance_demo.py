@@ -1,0 +1,58 @@
+"""Non-interrupted fault tolerance demo (paper §6.1 / Fig. 16).
+
+Kills loaders (shadow promotion) and the planner (differential-checkpoint
+recovery) mid-run; training-side delivery never pauses.
+
+    PYTHONPATH=src python examples/fault_tolerance_demo.py
+"""
+import tempfile
+import time
+
+from repro.configs import get_config
+from repro.core import (
+    ClientPlaceTree, Overlord, OverlordConfig, StaticSchedule,
+)
+from repro.data.cost_models import backbone_cost
+from repro.data.sources import coyo_like_specs, materialize_group
+
+
+def main():
+    root = tempfile.mkdtemp(prefix="overlord_ft_")
+    specs = coyo_like_specs(3)
+    paths = materialize_group(specs, root)
+    cfg = get_config("qwen3-8b")
+    tree = ClientPlaceTree([("PP", 1), ("DP", 2), ("CP", 1), ("TP", 1)])
+    ov = Overlord(paths, tree,
+                  StaticSchedule({s.name: 1.0 for s in specs}),
+                  OverlordConfig(
+                      seq_len=256, rows_per_microbatch=2, n_bins=1,
+                      strategy="backbone_balance",
+                      strategy_params=dict(costfn=backbone_cost(cfg),
+                                           broadcast=()),
+                      prefetch=3, shadows=True)).start()
+    try:
+        for step in range(30):
+            if step == 10:
+                names = ov.inject_loader_failures(2)
+                print(f"  !! killed loaders at step {step}: {names}")
+            if step == 20:
+                ov.inject_planner_failure()
+                print(f"  !! killed planner at step {step}")
+            t0 = time.time()
+            for rank in range(tree.world):
+                ov.get_batch(step, rank, timeout=20)
+            stall = time.time() - t0
+            marker = " <-- failure window" if step in (10, 20) else ""
+            print(f"step {step:3d} fetch {stall * 1e3:7.2f}ms{marker}")
+            ov.step_done(step)
+        print(f"\nshadow promotions: "
+              f"{[p['name'] for p in ov.shadow_mgr.promotions]}")
+        print(f"recoveries: "
+              f"{[(r['actor'], round(r['recovery_s'], 4)) for r in ov.recovery_log]}")
+        print("delivery was never interrupted.")
+    finally:
+        ov.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+# OVERLORD data plane — the paper's primary contribution.
+from repro.core.actors import Actor, ActorHandle, ActorRuntime  # noqa: F401
+from repro.core.balance import (  # noqa: F401
+    balance_items, bin_loads, greedy_binpack, imbalance, karmarkar_karp,
+    multi_greedy_binpack,
+)
+from repro.core.dgraph import DGraph  # noqa: F401
+from repro.core.mixing import (  # noqa: F401
+    AdaptiveSchedule, CurriculumSchedule, MixSchedule, StagedSchedule,
+    StaticSchedule,
+)
+from repro.core.orchestrator import Overlord, OverlordConfig  # noqa: F401
+from repro.core.placetree import ClientPlaceTree  # noqa: F401
+from repro.core.primitives import LoadingPlan, Orchestration  # noqa: F401
+from repro.core.strategies import STRATEGIES  # noqa: F401

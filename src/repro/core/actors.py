@@ -1,0 +1,237 @@
+"""Lightweight actor runtime (the paper builds on Ray; DESIGN.md §2).
+
+Semantics kept from the paper's needs: named actors with isolated state and
+a mailbox thread, async ``cast`` / sync ``call`` with futures, abrupt
+``kill`` (simulated crash: pending mail dropped, no cleanup), heartbeat
+supervision with failure callbacks, and memory introspection for the
+resource benchmarks.  On a real cluster this class is the only thing to
+swap for Ray/K8s actors.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+import traceback
+from concurrent.futures import Future
+from typing import Any, Callable, Optional
+
+
+class ActorDied(RuntimeError):
+    pass
+
+
+class Actor:
+    """Base class.  Subclasses define plain methods; they run on the actor
+    thread, one message at a time (no locks needed on actor state)."""
+
+    name: str = "actor"
+
+    # lifecycle hooks ---------------------------------------------------
+    def on_start(self) -> None: ...
+    def on_stop(self) -> None: ...
+
+    # checkpoint hooks (fault.py) --------------------------------------
+    def checkpoint_state(self) -> Any:
+        return None
+
+    def restore_state(self, state: Any) -> None: ...
+
+    # resource accounting ----------------------------------------------
+    def memory_bytes(self) -> int:
+        return 0
+
+
+class _Mail:
+    __slots__ = ("method", "args", "kwargs", "future")
+
+    def __init__(self, method, args, kwargs, future):
+        self.method = method
+        self.args = args
+        self.kwargs = kwargs
+        self.future = future
+
+
+class ActorHandle:
+    def __init__(self, name: str, actor: Actor, runtime: "ActorRuntime"):
+        self.name = name
+        self._actor = actor
+        self._runtime = runtime
+        self._mailbox: queue.Queue = queue.Queue()
+        self._alive = threading.Event()
+        self._killed = threading.Event()
+        self._thread = threading.Thread(
+            target=self._loop, name=f"actor:{name}", daemon=True)
+
+    # -- lifecycle -------------------------------------------------------
+    def _start(self):
+        self._alive.set()
+        self._thread.start()
+
+    def _loop(self):
+        try:
+            self._actor.on_start()
+        except Exception:
+            traceback.print_exc()
+            self._alive.clear()
+            return
+        while not self._killed.is_set():
+            try:
+                mail = self._mailbox.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            if mail is None:
+                break
+            if self._killed.is_set():
+                self._fail_mail(mail)
+                break
+            try:
+                fn = getattr(self._actor, mail.method)
+                result = fn(*mail.args, **mail.kwargs)
+                if mail.future is not None:
+                    mail.future.set_result(result)
+            except Exception as e:  # actor method raised
+                if mail.future is not None:
+                    mail.future.set_exception(e)
+                else:
+                    traceback.print_exc()
+        try:
+            if not self._killed.is_set():
+                self._actor.on_stop()
+        finally:
+            self._alive.clear()
+            self._drain_mailbox()
+
+    def _fail_mail(self, mail):
+        if mail is not None and mail.future is not None \
+                and not mail.future.done():
+            mail.future.set_exception(ActorDied(
+                f"actor {self.name} died with mail pending"))
+
+    def _drain_mailbox(self):
+        """A dead actor must not leave callers blocked on futures."""
+        while True:
+            try:
+                self._fail_mail(self._mailbox.get_nowait())
+            except queue.Empty:
+                return
+
+    @property
+    def alive(self) -> bool:
+        return self._alive.is_set()
+
+    def kill(self):
+        """Simulated crash: no cleanup, pending mail dropped."""
+        self._killed.set()
+
+    def stop(self):
+        """Graceful stop: drain then on_stop()."""
+        self._mailbox.put(None)
+        self._thread.join(timeout=5)
+        self._alive.clear()
+
+    # -- messaging -------------------------------------------------------
+    def call(self, method: str, *args, timeout: Optional[float] = 30.0,
+             **kwargs):
+        if not self.alive:
+            raise ActorDied(f"actor {self.name} is dead")
+        fut: Future = Future()
+        self._mailbox.put(_Mail(method, args, kwargs, fut))
+        return fut.result(timeout=timeout)
+
+    def call_async(self, method: str, *args, **kwargs) -> Future:
+        if not self.alive:
+            raise ActorDied(f"actor {self.name} is dead")
+        fut: Future = Future()
+        self._mailbox.put(_Mail(method, args, kwargs, fut))
+        return fut
+
+    def cast(self, method: str, *args, **kwargs) -> None:
+        if not self.alive:
+            raise ActorDied(f"actor {self.name} is dead")
+        self._mailbox.put(_Mail(method, args, kwargs, None))
+
+    # -- introspection ----------------------------------------------------
+    def memory_bytes(self) -> int:
+        if not self.alive:
+            return 0
+        try:
+            return self.call("memory_bytes", timeout=10)
+        except Exception:
+            return 0
+
+    @property
+    def mailbox_depth(self) -> int:
+        return self._mailbox.qsize()
+
+
+class ActorRuntime:
+    """Spawns actors, supervises liveness, reports fleet memory."""
+
+    def __init__(self, heartbeat_interval: float = 0.05):
+        self._actors: dict[str, ActorHandle] = {}
+        self._lock = threading.Lock()
+        self._failure_cbs: list[Callable[[str, ActorHandle], None]] = []
+        self._hb_interval = heartbeat_interval
+        self._stop = threading.Event()
+        self._reported_dead: set[str] = set()
+        self._monitor = threading.Thread(
+            target=self._monitor_loop, name="actor-monitor", daemon=True)
+        self._monitor.start()
+
+    def spawn(self, name: str, actor: Actor) -> ActorHandle:
+        actor.name = name
+        handle = ActorHandle(name, actor, self)
+        with self._lock:
+            if name in self._actors and self._actors[name].alive:
+                raise ValueError(f"actor {name!r} already running")
+            self._actors[name] = handle
+            self._reported_dead.discard(name)
+        handle._start()
+        return handle
+
+    def get(self, name: str) -> ActorHandle:
+        with self._lock:
+            return self._actors[name]
+
+    def reassign(self, old: str, new: str) -> ActorHandle:
+        """Re-register a live actor under a new name (shadow promotion)."""
+        with self._lock:
+            h = self._actors.pop(old)
+            h.name = new
+            h._actor.name = new
+            self._actors[new] = h
+            self._reported_dead.discard(new)
+            return h
+
+    def on_failure(self, cb: Callable[[str, ActorHandle], None]):
+        self._failure_cbs.append(cb)
+
+    def _monitor_loop(self):
+        while not self._stop.is_set():
+            time.sleep(self._hb_interval)
+            with self._lock:
+                items = list(self._actors.items())
+            for name, h in items:
+                if not h.alive and h._killed.is_set() \
+                        and name not in self._reported_dead:
+                    self._reported_dead.add(name)
+                    for cb in self._failure_cbs:
+                        try:
+                            cb(name, h)
+                        except Exception:
+                            traceback.print_exc()
+
+    def actors(self) -> dict[str, ActorHandle]:
+        with self._lock:
+            return dict(self._actors)
+
+    def memory_report(self) -> dict[str, int]:
+        return {n: h.memory_bytes() for n, h in self.actors().items()
+                if h.alive}
+
+    def shutdown(self):
+        self._stop.set()
+        for h in self.actors().values():
+            if h.alive:
+                h.stop()

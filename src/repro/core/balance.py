@@ -1,0 +1,128 @@
+"""Balancing methods for the ``balance()`` primitive (paper §4.2).
+
+Both operate on (cost, item) pairs and return bin assignments minimizing
+the max-bin cost (the straggler — what sets step time under quadratic
+attention).  ``greedy_binpack`` is LPT (4/3-approx); ``karmarkar_karp``
+is the multiway differencing method (better for few large bins).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Callable, Optional, Sequence
+
+
+def greedy_binpack(costs: Sequence[float], n_bins: int) -> list[int]:
+    """Longest-processing-time-first.  Returns bin index per item."""
+    if n_bins <= 0:
+        raise ValueError("n_bins must be positive")
+    order = sorted(range(len(costs)), key=lambda i: -costs[i])
+    heap = [(0.0, b) for b in range(n_bins)]
+    heapq.heapify(heap)
+    assign = [0] * len(costs)
+    for i in order:
+        load, b = heapq.heappop(heap)
+        assign[i] = b
+        heapq.heappush(heap, (load + costs[i], b))
+    return assign
+
+
+def karmarkar_karp(costs: Sequence[float], n_bins: int) -> list[int]:
+    """Multiway Karmarkar-Karp differencing.
+
+    Maintains a heap of partial solutions (tuples of per-bin loads with the
+    item sets); repeatedly merges the two largest by combining largest bin
+    with smallest bin.
+    """
+    if n_bins <= 0:
+        raise ValueError("n_bins must be positive")
+    n = len(costs)
+    if n == 0:
+        return []
+    counter = itertools.count()
+    # each heap entry: (-spread, tiebreak, loads tuple desc, bins: tuple of
+    # tuples of item indices, aligned with loads)
+    heap = []
+    for i, c in enumerate(costs):
+        loads = tuple([float(c)] + [0.0] * (n_bins - 1))
+        bins = tuple([(i,)] + [()] * (n_bins - 1))
+        heapq.heappush(heap, (-(loads[0] - loads[-1]), next(counter),
+                              loads, bins))
+    while len(heap) > 1:
+        _, _, l1, b1 = heapq.heappop(heap)
+        _, _, l2, b2 = heapq.heappop(heap)
+        # combine: largest of 1 with smallest of 2, etc.
+        loads = [l1[i] + l2[n_bins - 1 - i] for i in range(n_bins)]
+        bins = [b1[i] + b2[n_bins - 1 - i] for i in range(n_bins)]
+        order = sorted(range(n_bins), key=lambda i: -loads[i])
+        loads_t = tuple(loads[i] for i in order)
+        bins_t = tuple(bins[i] for i in order)
+        heapq.heappush(heap, (-(loads_t[0] - loads_t[-1]), next(counter),
+                              loads_t, bins_t))
+    _, _, loads, bins = heap[0]
+    assign = [0] * n
+    for b, items in enumerate(bins):
+        for i in items:
+            assign[i] = b
+    return assign
+
+
+def multi_greedy_binpack(cost_vectors: Sequence[Sequence[float]],
+                         n_bins: int) -> list[int]:
+    """Inter-module balancing: each item carries one cost per module
+    (e.g. [encoder, backbone]); greedily place items (largest combined
+    first) into the bin minimizing the worst per-module normalized load.
+    This is the paper's hybrid balance: both module workloads must be flat
+    simultaneously because the modules are colocated on the same GPUs."""
+    if n_bins <= 0:
+        raise ValueError("n_bins must be positive")
+    n = len(cost_vectors)
+    if n == 0:
+        return []
+    dims = len(cost_vectors[0])
+    means = [max(sum(v[d] for v in cost_vectors) / n, 1e-12)
+             for d in range(dims)]
+    norm = [[v[d] / means[d] for d in range(dims)] for v in cost_vectors]
+    order = sorted(range(n), key=lambda i: -max(norm[i]))
+    loads = [[0.0] * dims for _ in range(n_bins)]
+    assign = [0] * n
+    for i in order:
+        best, best_val = 0, float("inf")
+        for b in range(n_bins):
+            val = max(loads[b][d] + norm[i][d] for d in range(dims))
+            if val < best_val:
+                best, best_val = b, val
+        assign[i] = best
+        for d in range(dims):
+            loads[best][d] += norm[i][d]
+    return assign
+
+
+METHODS: dict[str, Callable] = {
+    "greedy_binpack": greedy_binpack,
+    "karmarkar_karp": karmarkar_karp,
+}
+
+
+def balance_items(costs: Sequence[float], n_bins: int,
+                  method: str = "greedy_binpack") -> list[int]:
+    try:
+        fn = METHODS[method]
+    except KeyError:
+        raise ValueError(
+            f"unknown balance method {method!r}; have {sorted(METHODS)}")
+    return fn(costs, n_bins)
+
+
+def bin_loads(costs: Sequence[float], assign: Sequence[int],
+              n_bins: int) -> list[float]:
+    loads = [0.0] * n_bins
+    for c, b in zip(costs, assign):
+        loads[b] += c
+    return loads
+
+
+def imbalance(loads: Sequence[float]) -> float:
+    """max/mean — 1.0 is perfect; the paper's Fig. 3 reports up to 6.9x."""
+    m = sum(loads) / max(len(loads), 1)
+    return max(loads) / m if m > 0 else 1.0

@@ -1,0 +1,301 @@
+"""Overlord: the end-to-end public API of the data plane.
+
+Wires together: auto-partitioned Source Loaders (+hot shadows), per-bucket
+Data Constructors, the central Planner, trainer clients with prefetch, the
+checkpoint store with differential frequencies, and the mixture-driven
+AutoScaler.  This is the object launch/train.py and the examples use.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.actors import ActorRuntime
+from repro.core.autoscale import (
+    LoaderConfig, MixtureScaler, PartitionLimits, SourceProfile,
+    auto_partition,
+)
+from repro.core.client import TrainerClient
+from repro.core.constructor import DataConstructor
+from repro.core.fault import CheckpointStore, ShadowManager
+from repro.core.mixing import MixSchedule, StaticSchedule
+from repro.core.placetree import ClientPlaceTree
+from repro.core.planner import Planner
+from repro.core.source_loader import SourceLoader
+from repro.core.strategies import STRATEGIES
+from repro.data.storage import SourceReader
+
+
+@dataclasses.dataclass
+class OverlordConfig:
+    seq_len: int = 512
+    rows_per_microbatch: int = 4      # packed rows per bucket per bin
+    n_bins: int = 2                   # microbatches per bucket
+    samples_per_step: int = 0         # 0 -> auto from capacity
+    strategy: str = "backbone_balance"
+    strategy_params: dict = dataclasses.field(default_factory=dict)
+    prefetch: int = 2
+    buffer_target: int = 256         # loader read-buffer depth (records)
+    auto_partition: bool = True
+    limits: PartitionLimits = dataclasses.field(
+        default_factory=PartitionLimits)
+    shadows: bool = True
+    checkpoint_dir: Optional[str] = None
+    planner_ckpt_every: int = 1
+    loader_ckpt_every: int = 8
+    restore_delay_s: float = 0.0     # simulated persistent-store latency
+    vocab_size: int = 50_000
+    seed: int = 0
+    fill_factor: float = 0.6          # packing headroom
+
+
+class Overlord:
+    def __init__(self, source_paths: dict[str, str],
+                 tree: ClientPlaceTree, schedule: MixSchedule,
+                 cfg: OverlordConfig = OverlordConfig()):
+        self.paths = dict(source_paths)
+        self.tree = tree
+        self.schedule = schedule
+        self.cfg = cfg
+        self.runtime = ActorRuntime()
+        self.store = CheckpointStore(cfg.checkpoint_dir,
+                                     cfg.planner_ckpt_every,
+                                     cfg.loader_ckpt_every,
+                                     cfg.restore_delay_s)
+        self.loaders: dict[str, object] = {}
+        self.constructors: dict[int, object] = {}
+        self.clients: dict[int, TrainerClient] = {}
+        self.planner = None
+        self._planner_args = None
+        self.shadow_mgr: Optional[ShadowManager] = None
+        self.scaler: Optional[MixtureScaler] = None
+        self._loader_cfgs: dict[str, LoaderConfig] = {}
+        self._started = False
+        self._lock = threading.Lock()
+        self.recovery_log: list[dict] = []
+
+    # ----------------------------------------------------------- profiles
+    def _profile_sources(self) -> list[SourceProfile]:
+        profs = []
+        for name, path in self.paths.items():
+            with SourceReader(path) as r:
+                recs = r.read(8)
+                cost = float(np.mean([rc["transform_cost"] for rc in recs]))
+                mem = r.access_state_bytes
+            profs.append(SourceProfile(name, cost, mem,
+                                       1.0 / max(len(self.paths), 1)))
+        return profs
+
+    # -------------------------------------------------------------- start
+    def start(self):
+        assert not self._started
+        cfg = self.cfg
+        if cfg.samples_per_step == 0:
+            nb = self.tree.buckets(
+                cfg.strategy_params.get("axis", "DP"))
+            capacity = nb * cfg.n_bins * cfg.rows_per_microbatch \
+                * cfg.seq_len
+            # rough mean tokens/sample for sizing
+            cfg.samples_per_step = max(
+                nb * cfg.n_bins,
+                int(capacity * cfg.fill_factor / 96))
+
+        # loaders (phase-1 auto-partitioning)
+        if cfg.auto_partition:
+            lcfgs = auto_partition(self._profile_sources(), cfg.limits)
+        else:
+            lcfgs = [LoaderConfig(n, 0, 1, 1) for n in self.paths]
+        for lc in lcfgs:
+            h = self.runtime.spawn(lc.actor_name, self._make_loader(lc))
+            self.loaders[lc.actor_name] = h
+            self._loader_cfgs[lc.actor_name] = lc
+
+        # constructors: one per bucket at the distribute axis
+        axis = cfg.strategy_params.get("axis", "DP")
+        for b in range(self.tree.buckets(axis)):
+            h = self.runtime.spawn(
+                f"constructor:{b}",
+                DataConstructor(b, self.tree, cfg.seq_len,
+                                cfg.rows_per_microbatch, cfg.n_bins))
+            self.constructors[b] = h
+
+        # planner
+        strategy = STRATEGIES[cfg.strategy]
+        sparams = dict(cfg.strategy_params)
+        sparams.setdefault("n_bins", cfg.n_bins)
+        self._planner_args = dict(
+            tree=self.tree, schedule=self.schedule, strategy=strategy,
+            strategy_params=sparams,
+            samples_per_step=cfg.samples_per_step, seed=cfg.seed)
+        self.planner = self.runtime.spawn(
+            "planner", Planner(loaders=dict(self.loaders),
+                               constructors=dict(self.constructors),
+                               **self._planner_args))
+
+        # shadows + supervision
+        if cfg.shadows:
+            self.shadow_mgr = ShadowManager(self.runtime, self._make_shadow)
+            for name in list(self.loaders):
+                self.shadow_mgr.ensure_shadow(name)
+        self.runtime.on_failure(self._on_actor_failure)
+
+        # online mixture scaler
+        self.scaler = MixtureScaler(
+            self.runtime, self.paths,
+            register=self._register_loader,
+            unregister=self._unregister_loader)
+        self.planner.call("set_scale_callback", self.scaler.on_trigger)
+
+        # trainer clients
+        for rank in range(self.tree.world):
+            self.clients[rank] = TrainerClient(
+                rank, self._fetch_view, prefetch=cfg.prefetch)
+        self._started = True
+        return self
+
+    def _make_loader(self, lc: LoaderConfig) -> SourceLoader:
+        return SourceLoader(lc.source, self.paths[lc.source],
+                            (lc.shard_index, lc.shard_count), lc.workers,
+                            buffer_target=self.cfg.buffer_target,
+                            vocab_size=self.cfg.vocab_size,
+                            seed=self.cfg.seed)
+
+    def _make_shadow(self, name: str) -> SourceLoader:
+        return self._make_loader(self._loader_cfgs[name])
+
+    # ------------------------------------------------------ loader churn
+    def _register_loader(self, name: str, handle):
+        with self._lock:
+            self.loaders[name] = handle
+            parts = name.split(":")
+            idx, cnt = parts[2].split("of")
+            self._loader_cfgs[name] = LoaderConfig(
+                parts[1], int(idx), int(cnt), 2)
+        self.planner.call("set_loaders", dict(self.loaders))
+        if self.shadow_mgr:
+            self.shadow_mgr.ensure_shadow(name)
+
+    def _unregister_loader(self, name: str):
+        with self._lock:
+            self.loaders.pop(name, None)
+        self.planner.call("set_loaders", dict(self.loaders))
+
+    # ------------------------------------------------------- supervision
+    def _on_actor_failure(self, name: str, handle):
+        t0 = time.time()
+        if name == "planner":
+            self._recover_planner()
+        elif name.startswith("loader:") and "::shadow" not in name:
+            self._recover_loader(name)
+        self.recovery_log.append(
+            {"actor": name, "recovery_s": time.time() - t0,
+             "time": time.time()})
+
+    def _recover_planner(self):
+        ckpt = self.store.load("planner")
+        self.planner = self.runtime.spawn(
+            "planner", Planner(loaders=dict(self.loaders),
+                               constructors=dict(self.constructors),
+                               **self._planner_args))
+        if ckpt:
+            self.planner.call("restore_state", ckpt["state"])
+        self.planner.call("set_scale_callback", self.scaler.on_trigger)
+
+    def _recover_loader(self, name: str):
+        promoted = None
+        if self.shadow_mgr:
+            promoted = self.shadow_mgr.promote(name)
+        if promoted is not None:
+            with self._lock:
+                self.loaders[name] = promoted
+        else:
+            # cold path: restore from checkpoint + replay plan history
+            h = self.runtime.spawn(name, self._make_loader(
+                self._loader_cfgs[name]))
+            ckpt = self.store.load(name)
+            if ckpt:
+                h.call("restore_state", ckpt["state"])
+                hist = self.planner.call("history_window")
+                replay = [ids.get(name, []) for s, ids in sorted(
+                    hist.items()) if s > ckpt["step"]]
+                h.call("replay", [r for r in replay if r])
+            with self._lock:
+                self.loaders[name] = h
+        self.planner.call("set_loaders", dict(self.loaders))
+        if self.shadow_mgr:
+            self.shadow_mgr.ensure_shadow(name)
+
+    # ---------------------------------------------------------- data path
+    def _fetch_view(self, step: int, rank: int) -> Optional[dict]:
+        try:
+            self.planner.call("ensure_planned", step, timeout=120)
+        except Exception:
+            return None  # planner down: prefetch buffer rides through
+        axis = self.cfg.strategy_params.get("axis", "DP")
+        view = self.tree.client_view(rank, axis)
+        bucket = min(view.dp_index, max(self.constructors)) \
+            if self.constructors else 0
+        ch = self.constructors.get(bucket)
+        if ch is None:
+            return None
+        out = ch.call("get_view", step, rank, axis)
+        if out is None:
+            # planner died mid-plan: the step is 'planned' but lost —
+            # replan it once (fresh buffered data; see Planner.replan)
+            try:
+                if self.planner.call("replan", step):
+                    out = ch.call("get_view", step, rank, axis)
+            except Exception:
+                return None
+        return out
+
+    def get_batch(self, step: int, rank: int, timeout: float = 60.0) -> dict:
+        return self.clients[rank].get(step, timeout=timeout)
+
+    def step_done(self, step: int, metrics: Optional[dict] = None):
+        """Call once per completed train step: checkpoints + shadow sync."""
+        if metrics:
+            self.planner.cast("observe", step, metrics)
+        self.store.maybe_save("planner", "planner", step, self.planner)
+        for name, h in list(self.loaders.items()):
+            self.store.maybe_save("loader", name, step, h)
+            if self.shadow_mgr:
+                self.shadow_mgr.sync(name, h)
+
+    # ------------------------------------------------------ introspection
+    def memory_report(self) -> dict:
+        rep = self.runtime.memory_report()
+        out = {
+            "loaders": sum(v for k, v in rep.items()
+                           if k.startswith("loader:")
+                           and "::shadow" not in k),
+            "shadows": sum(v for k, v in rep.items() if "::shadow" in k),
+            "constructors": sum(v for k, v in rep.items()
+                                if k.startswith("constructor:")),
+            "planner": rep.get("planner", 0),
+        }
+        out["total_ex_shadows"] = (out["loaders"] + out["constructors"]
+                                   + out["planner"])
+        return out
+
+    def diagnostics(self) -> list[dict]:
+        return self.planner.call("diagnostics")
+
+    # --------------------------------------------------- fault injection
+    def inject_loader_failures(self, n: int = 1):
+        names = [k for k in self.loaders if "::shadow" not in k][:n]
+        for name in names:
+            self.loaders[name].kill()
+        return names
+
+    def inject_planner_failure(self):
+        self.planner.kill()
+
+    def shutdown(self):
+        for c in self.clients.values():
+            c.close()
+        self.runtime.shutdown()

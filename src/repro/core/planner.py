@@ -1,0 +1,218 @@
+"""Planner actor: centralized, declarative data plane (§3, §4).
+
+Per step: collect buffer metadata from Source Loaders -> run the user
+strategy over a fresh Orchestration -> emit the LoadingPlan -> direct
+loaders to prepare+deposit samples into the Data Constructors.  Also the
+control-plane brain: mixture schedule, plan history (replay window for
+differential checkpointing), and mixture-driven scaling triggers (§5.2).
+"""
+from __future__ import annotations
+
+import collections
+import pickle
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.actors import Actor, ActorHandle
+from repro.core.mixing import MixSchedule
+from repro.core.placetree import ClientPlaceTree
+from repro.core.primitives import LoadingPlan, Orchestration
+
+
+class Planner(Actor):
+    def __init__(self, tree: ClientPlaceTree, schedule: MixSchedule,
+                 strategy: Callable, strategy_params: dict,
+                 loaders: dict[str, ActorHandle],
+                 constructors: dict[int, ActorHandle],
+                 samples_per_step: int, seed: int = 0,
+                 scale_threshold: float = 1.5,
+                 scale_patience: int = 3):
+        self.tree = tree
+        self.schedule = schedule
+        self.strategy = strategy
+        self.strategy_params = dict(strategy_params)
+        self.loaders = dict(loaders)          # name -> handle
+        self.constructors = dict(constructors)
+        self.samples_per_step = samples_per_step
+        self.seed = seed
+        self._planned_through = -1
+        self._history: collections.OrderedDict = collections.OrderedDict()
+        self._diag_log: list[dict] = []
+        # mixture-driven scaling state (§5.2)
+        self._weight_ema: dict[str, float] = {}
+        self._over_count: collections.Counter = collections.Counter()
+        self._under_count: collections.Counter = collections.Counter()
+        self.scale_threshold = scale_threshold
+        self.scale_patience = scale_patience
+        self._scale_events: list[dict] = []
+        self._scale_cb: Optional[Callable] = None
+
+    # -- wiring ------------------------------------------------------------
+    def set_loaders(self, loaders: dict[str, ActorHandle]):
+        self.loaders = dict(loaders)
+
+    def set_scale_callback(self, cb: Callable):
+        """cb(source, direction) -> None; installed by the AutoScaler."""
+        self._scale_cb = cb
+
+    # -- planning ------------------------------------------------------------
+    def ensure_planned(self, step: int) -> int:
+        while self._planned_through < step:
+            self._plan_one(self._planned_through + 1)
+        return self._planned_through
+
+    def replan(self, step: int) -> bool:
+        """Re-execute a step's plan after recovery: a planner that died
+        mid-plan may have 'planned' a step no constructor holds.  Allowed
+        once per step per incarnation (the data differs from the lost plan
+        — it is fresh buffered data, which is fine: samples are exchangeable
+        within the mixture)."""
+        if not hasattr(self, "_replanned"):
+            self._replanned: set[int] = set()
+        if step in self._replanned or step > self._planned_through:
+            return False
+        self._replanned.add(step)
+        self._plan_one(step)
+        return True
+
+    def _collect_buffers(self) -> tuple[list[dict], dict[str, str]]:
+        """Merge loader buffers; map sample_id -> owning loader name."""
+        meta, owner = [], {}
+        for name, h in self.loaders.items():
+            if not h.alive:
+                continue
+            try:
+                entries = h.call("summary_buffer", timeout=10)
+            except Exception:
+                continue
+            for m in entries:
+                meta.append(m)
+                owner[m["sample_id"]] = name
+        return meta, owner
+
+    def _plan_one(self, step: int):
+        buffer_meta, owner = self._collect_buffers()
+        ctx = Orchestration(buffer_meta, self.tree, step, self.seed)
+        plan: LoadingPlan = self.strategy(
+            ctx, schedule=self.schedule, total=self.samples_per_step,
+            **self.strategy_params)
+
+        # direct loaders: prepare planned samples (transform on the loader),
+        # THEN announce realized counts + deposit, so a loader failing
+        # mid-plan can never wedge a constructor on missing counts.
+        by_loader: dict[str, list] = collections.defaultdict(list)
+        for e in plan.entries:
+            ln = owner.get(e.sample_id)
+            if ln is not None:
+                by_loader[ln].append(e)
+        deposits = collections.defaultdict(list)  # bucket -> [(src, s, bin)]
+        for lname, entries in by_loader.items():
+            h = self.loaders.get(lname)
+            if h is None or not h.alive:
+                continue
+            ids = [e.sample_id for e in entries]
+            try:
+                samples = h.call("prepare", ids, timeout=60)
+            except Exception:
+                continue  # supervision promotes a shadow; step degrades
+            by_id = {s.sample_id: s for s in samples}
+            for e in entries:
+                if e.sample_id in by_id:
+                    deposits[e.bucket].append(
+                        (e.source, by_id[e.sample_id], e.bin))
+        for bucket, h in self.constructors.items():
+            items = deposits.get(bucket, [])
+            counts = collections.Counter(src for src, _, _ in items)
+            h.call("expect", step, dict(counts) or {"_": 0}, plan.bins)
+            per_src = collections.defaultdict(list)
+            for src, s, b in items:
+                per_src[src].append((s, b))
+            for src, pairs in per_src.items():
+                h.call("deposit", step, src, [p[0] for p in pairs],
+                       [p[1] for p in pairs])
+
+        self._history[step] = {
+            "per_loader_ids": {ln: [e.sample_id for e in es]
+                               for ln, es in by_loader.items()},
+            "weights": plan.diagnostics.get("mix_weights", {}),
+        }
+        while len(self._history) > 64:
+            self._history.popitem(last=False)
+        self._diag_log.append(
+            {"step": step, **{k: v for k, v in plan.diagnostics.items()
+                              if k.startswith("balance")}})
+        self._planned_through = step
+        self._maybe_scale(plan)
+        return plan
+
+    # -- dynamic mixture scaling (§5.2) ---------------------------------------
+    def _maybe_scale(self, plan: LoadingPlan):
+        weights = plan.diagnostics.get("mix_weights", {})
+        if not weights:
+            return
+        base = 1.0 / max(len(weights), 1)
+        for src, w in weights.items():
+            ema = self._weight_ema.get(src, base)
+            ema = 0.8 * ema + 0.2 * w
+            self._weight_ema[src] = ema
+            if ema > self.scale_threshold * base:
+                self._over_count[src] += 1
+                self._under_count[src] = 0
+            elif ema < base / self.scale_threshold:
+                self._under_count[src] += 1
+                self._over_count[src] = 0
+            else:
+                self._over_count[src] = 0
+                self._under_count[src] = 0
+            if self._over_count[src] >= self.scale_patience:
+                self._over_count[src] = -self.scale_patience  # cooldown
+                self._scale_events.append(
+                    {"step": plan.step, "source": src, "dir": "up",
+                     "ema": ema})
+                if self._scale_cb:
+                    self._scale_cb(src, "up")
+            if self._under_count[src] >= self.scale_patience:
+                self._under_count[src] = -self.scale_patience
+                self._scale_events.append(
+                    {"step": plan.step, "source": src, "dir": "down",
+                     "ema": ema})
+                if self._scale_cb:
+                    self._scale_cb(src, "down")
+
+    # -- metrics feedback -------------------------------------------------------
+    def observe(self, step: int, metrics: dict):
+        self.schedule.observe(step, metrics)
+
+    # -- introspection ----------------------------------------------------------
+    def diagnostics(self) -> list[dict]:
+        return list(self._diag_log)
+
+    def scale_events(self) -> list[dict]:
+        return list(self._scale_events)
+
+    def planned_through(self) -> int:
+        return self._planned_through
+
+    def history_window(self) -> dict:
+        return {s: h["per_loader_ids"] for s, h in self._history.items()}
+
+    def memory_bytes(self) -> int:
+        return len(pickle.dumps(self._history)) \
+            + len(pickle.dumps(self._diag_log[-32:]))
+
+    # -- checkpointing -------------------------------------------------------
+    def checkpoint_state(self) -> dict:
+        return {
+            "planned_through": self._planned_through,
+            "schedule": pickle.dumps(self.schedule),
+            "weight_ema": dict(self._weight_ema),
+            "history": pickle.dumps(self._history),
+        }
+
+    def restore_state(self, state: dict):
+        self._planned_through = state["planned_through"]
+        self.schedule = pickle.loads(state["schedule"])
+        self._weight_ema = dict(state["weight_ema"])
+        self._history = pickle.loads(state["history"])

@@ -1,0 +1,70 @@
+"""Sample transformations (the P term of the loader cost tuple (P, T, M)).
+
+Each transform converts a raw storage record into a training-ready sample:
+token ids (text) and patch-embedding token counts (image/video/audio).
+Real work is done (deterministic tokenization from the record seed) so the
+pipeline is end-to-end runnable; in addition every transform reports its
+*virtual cost* in normalized cpu-units — the quantity the AutoScaler
+provisions for (Fig. 5's heterogeneity), so benchmarks on this 1-core
+container can reason about fleet sizing without wall-clock noise.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Sample:
+    sample_id: str
+    source: str
+    modality: str
+    tokens: np.ndarray          # token ids (text part)
+    image_tokens: int           # number of patch tokens (0 for text)
+    virtual_cost: float         # normalized preprocessing cost units
+    meta: dict
+
+    @property
+    def total_tokens(self) -> int:
+        return int(len(self.tokens)) + int(self.image_tokens)
+
+
+def transform_record(record: dict, source: str, vocab_size: int = 50_000,
+                     work_scale: float = 0.0) -> Sample:
+    """Tokenize / decode one record.
+
+    ``work_scale`` > 0 burns proportional real CPU (for wall-clock
+    experiments); the default keeps transforms cheap and reports virtual
+    cost only.
+    """
+    n_text = int(record["text_tokens"])
+    n_img = int(record["image_tokens"])
+    rng = np.random.default_rng(record["seed"])
+    tokens = rng.integers(1, vocab_size, size=n_text, dtype=np.int32)
+    cost = float(record["transform_cost"]) * (n_text + n_img)
+    if work_scale > 0:  # simulate heavyweight decode (JPEG/keyframe)
+        k = int(work_scale * cost)
+        if k:
+            np.square(np.arange(min(k, 200_000), dtype=np.float64)).sum()
+    return Sample(
+        sample_id=record["sample_id"], source=source,
+        modality=record["modality"], tokens=tokens, image_tokens=n_img,
+        virtual_cost=cost,
+        meta={"text_tokens": n_text, "image_tokens": n_img},
+    )
+
+
+def record_metadata(record: dict, source: str) -> dict:
+    """Lightweight metadata (what Source Loaders report to the Planner —
+    DGraph nodes carry this, never payloads)."""
+    return {
+        "sample_id": record["sample_id"],
+        "source": source,
+        "modality": record["modality"],
+        "text_tokens": int(record["text_tokens"]),
+        "image_tokens": int(record["image_tokens"]),
+        "transform_cost": float(record["transform_cost"]),
+    }

@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: chunked WKV6 (RWKV6 linear-attention) forward.
+
+Grid = (batch, heads, chunks); the chunk dim is innermost and sequential,
+carrying the (dk x dv) state matrix in VMEM scratch — the linear-attention
+analogue of the flash pattern.  All decay exponents are causal-range
+cumulative sums (<= 0), so the kernel needs no rescaling tricks (see
+models/rwkv.py for the math and the reset-penalty packing semantics).
+
+The intra-chunk (t, s, i) tensor lives entirely in VMEM:
+L=64, dk=64 -> 1 MiB fp32, the MXU-friendly sweet spot.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 64
+NEG = -1e30
+
+
+def _wkv_kernel(u_ref, rst_ref, r_ref, k_ref, v_ref, loga_ref, o_ref,
+                S_ref, *, chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        S_ref[...] = jnp.zeros_like(S_ref)
+
+    r = r_ref[0, 0].astype(jnp.float32)           # (L, dk)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)           # (L, dv)
+    loga = loga_ref[0, 0].astype(jnp.float32)     # (L, dk) pure log decay
+    rst = rst_ref[0].astype(jnp.int32)            # (L,) reset indicators
+    u = u_ref[0].astype(jnp.float32)              # (dk,)
+    S = S_ref[...]                                # (dk, dv)
+
+    # Reset counts (exact), never folded into the fp32 decay cumsum — see
+    # models/rwkv.py for the catastrophic-cancellation rationale.
+    cw = jnp.cumsum(loga, axis=0)                 # incl current token
+    cwm1 = cw - loga                              # excl current token
+    R = jnp.cumsum(rst)                           # resets up to & incl t
+
+    # inter-chunk: valid only while no reset has occurred in this chunk
+    q_exp = jnp.where((R == 0)[:, None],
+                      jnp.exp(jnp.minimum(cwm1, 0.0)), 0.0)
+    o = jax.lax.dot_general((r * q_exp), S, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    # intra-chunk: A[t,s] = sum_i r[t,i] k[s,i] exp(cwm1_t - cw_s),
+    # s < t, valid iff R_t == R_s (no reset in (s, t])
+    expo = jnp.minimum(cwm1[:, None, :] - cw[None, :, :], 0.0)
+    pair_valid = (R[:, None] == R[None, :])[:, :, None]
+    A = jnp.sum(jnp.where(pair_valid,
+                          r[:, None, :] * k[None, :, :] * jnp.exp(expo),
+                          0.0), axis=-1)
+    t_i = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_i = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    A = jnp.where(t_i > s_i, A, 0.0)
+    o = o + jax.lax.dot_general(A, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    # diagonal bonus: (r_t . (u * k_t)) v_t
+    diag = jnp.sum(r * u[None, :] * k, axis=1)
+    o = o + diag[:, None] * v
+    # state update
+    dec = jnp.where(R[-1] == 0, jnp.exp(jnp.minimum(cw[-1], 0.0)), 0.0)
+    k_hat = k * jnp.where((R[-1] == R)[:, None],
+                          jnp.exp(jnp.minimum(cw[-1][None, :] - cw, 0.0)),
+                          0.0)
+    S_ref[...] = S * dec[:, None] + jax.lax.dot_general(
+        k_hat, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    o_ref[0, 0] = o.astype(o_ref.dtype)
+
+
+def wkv6_forward(r, k, v, loga, u, reset, *, chunk: int = DEFAULT_CHUNK,
+                 interpret: bool = True):
+    """r, k, v, loga: (b, h, s, dk) fp32; u: (h, dk); reset: (b, s) bool.
+    Returns o: (b, h, s, dk)."""
+    b, h, s, dk = r.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rst = reset.astype(jnp.int32)                           # (b, s)
+
+    kernel = functools.partial(_wkv_kernel, chunk=chunk)
+    blk = lambda ib, ih, ic: (ib, ih, ic, 0)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, dk), lambda ib, ih, ic: (ih, 0)),
+            pl.BlockSpec((1, chunk), lambda ib, ih, ic: (ib, ic)),
+            pl.BlockSpec((1, 1, chunk, dk), blk),
+            pl.BlockSpec((1, 1, chunk, dk), blk),
+            pl.BlockSpec((1, 1, chunk, dk), blk),
+            pl.BlockSpec((1, 1, chunk, dk), blk),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, dk), blk),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, dk), r.dtype),
+        scratch_shapes=[pltpu.VMEM((dk, dk), jnp.float32)],
+        interpret=interpret,
+    )(u, rst, r, k, v, loga)

@@ -1,0 +1,247 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init).  Everything below is ordinary code.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b \
+        --shape train_4k --mesh single --out results/dryrun
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import functools
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (
+    SHAPES, ModelConfig, ShapeConfig, assigned_archs, get_config,
+    shape_applicable,
+)
+from repro.launch.hlo_cost import rollup
+from repro.launch.mesh import make_production_mesh
+from repro.models.model_zoo import (
+    batch_logical_axes, build_model, input_specs,
+)
+from repro.models import params as pdefs
+from repro.sharding.logical import (
+    DECODE_RULES, LONG_DECODE_RULES, TRAIN_RULES, ShardingRules, use_rules,
+)
+from repro.train.optimizer import AdamWState
+from repro.train.train_step import (
+    TrainState, abstract_train_state, make_decode_step, make_prefill_step,
+    make_train_step,
+)
+
+_IS_TUPLE = lambda x: isinstance(x, tuple)
+
+
+def rules_for(shape: ShapeConfig):
+    if shape.kind != "decode":
+        return TRAIN_RULES
+    return LONG_DECODE_RULES if shape.name == "long_500k" else DECODE_RULES
+
+
+def tree_shardings(axes_tree, shapes_tree, rules: ShardingRules, mesh):
+    """Map a logical-axes tree + abstract-shapes tree -> NamedShardings."""
+    ax_leaves, treedef = jax.tree.flatten(axes_tree, is_leaf=_IS_TUPLE)
+    sh_leaves = treedef.flatten_up_to(shapes_tree)
+    out = [NamedSharding(mesh, rules.spec(a, s.shape))
+           for a, s in zip(ax_leaves, sh_leaves)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def per_device_bytes(shardings, shapes) -> int:
+    total = 0
+    for sh, sp in zip(jax.tree.leaves(shardings), jax.tree.leaves(shapes)):
+        shard_shape = sh.shard_shape(sp.shape)
+        total += int(np.prod(shard_shape)) * jnp.dtype(sp.dtype).itemsize
+    return total
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig, model) -> float:
+    """6*N_active*D (train) / 2*N_active*D (inference); N excludes embeds'
+    unused rows but we keep the simple convention N = all params, with MoE
+    experts scaled to the active fraction."""
+    n_total = model.param_count()
+    n_active = n_total
+    if cfg.num_experts > 0:
+        from repro.models.moe import padded_experts
+        per_layer = 3 * cfg.d_model * cfg.d_ff
+        n_expert_total = cfg.num_layers * padded_experts(cfg) * per_layer
+        n_expert_active = cfg.num_layers * cfg.experts_per_token * per_layer
+        n_active = n_total - n_expert_total + n_expert_active
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: one token/seq
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": why}
+
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mapping = rules_for(shape)
+    rules = ShardingRules(mesh, mapping)
+    record = {"arch": arch, "shape": shape_name,
+              "mesh": "multi" if multi_pod else "single",
+              "status": "ok", "params": model.param_count()}
+
+    t0 = time.time()
+    with use_rules(mesh, mapping):
+        if shape.kind == "train":
+            state = abstract_train_state(model)
+            specs = pdefs.logical_specs(model.defs)
+            # moments shard like params; step scalar replicated
+            state_shardings = TrainState(
+                params=tree_shardings(specs, state.params, rules, mesh),
+                opt=AdamWState(
+                    step=NamedSharding(mesh, P()),
+                    mu=tree_shardings(specs, state.opt.mu, rules, mesh),
+                    nu=tree_shardings(specs, state.opt.nu, rules, mesh)))
+            batch = input_specs(cfg, shape)
+            batch_sh = tree_shardings(batch_logical_axes(cfg, shape), batch,
+                                      rules, mesh)
+            step = make_train_step(model)
+            jitted = jax.jit(step, in_shardings=(state_shardings, batch_sh),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state, batch)
+            record["persistent_bytes_per_device"] = per_device_bytes(
+                state_shardings, state)
+        elif shape.kind == "prefill":
+            params = model.abstract_params(jnp.float32)
+            p_sh = tree_shardings(pdefs.logical_specs(model.defs), params,
+                                  rules, mesh)
+            batch = input_specs(cfg, shape)
+            batch_sh = tree_shardings(batch_logical_axes(cfg, shape), batch,
+                                      rules, mesh)
+            step = make_prefill_step(model)
+            jitted = jax.jit(step, in_shardings=(p_sh, batch_sh))
+            lowered = jitted.lower(params, batch)
+            record["persistent_bytes_per_device"] = per_device_bytes(
+                p_sh, params)
+        else:  # decode
+            params = model.abstract_params(jnp.float32)
+            p_sh = tree_shardings(pdefs.logical_specs(model.defs), params,
+                                  rules, mesh)
+            b, S = shape.global_batch, shape.seq_len
+            cache = jax.eval_shape(
+                functools.partial(model.init_cache, b, S))
+            c_sh = tree_shardings(model.cache_axes(), cache, rules, mesh)
+            tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+            tok_sh = NamedSharding(mesh, rules.spec(("batch", None),
+                                                    (b, 1)))
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            step = make_decode_step(model)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_sh, c_sh, tok_sh, NamedSharding(mesh, P())),
+                donate_argnums=(1,))
+            lowered = jitted.lower(params, cache, tokens, pos)
+            record["persistent_bytes_per_device"] = \
+                per_device_bytes(p_sh, params) + per_device_bytes(c_sh, cache)
+
+    record["trace_s"] = round(time.time() - t0, 2)
+    t1 = time.time()
+    compiled = lowered.compile()
+    record["compile_s"] = round(time.time() - t1, 2)
+
+    ca = compiled.cost_analysis() or {}
+    record["hlo_flops"] = float(ca.get("flops", -1.0))
+    record["hlo_bytes"] = float(ca.get("bytes accessed", -1.0))
+    try:
+        ma = compiled.memory_analysis()
+        record["memory_analysis"] = {
+            k: int(getattr(ma, k)) for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(ma, k)}
+    except Exception as e:  # CPU backend may not implement it
+        record["memory_analysis"] = {"unavailable": str(e)[:200]}
+
+    # Trip-count-aware roll-up (XLA cost_analysis counts while bodies once;
+    # see hlo_cost.py).  These are per-device quantities.
+    hlo = compiled.as_text()
+    rolled = rollup(hlo)
+    record["hlo_flops_rolled"] = rolled.flops
+    record["hlo_bytes_rolled"] = rolled.bytes
+    record["hlo_bytes_rolled_naive"] = rolled.bytes_naive
+    record["collective_result_bytes"] = rolled.collective_result_bytes
+    record["collective_wire_bytes"] = rolled.collective_wire_bytes
+    record["collective_counts"] = rolled.collective_counts
+    record["while_trips"] = rolled.while_trips[:50]
+    record["model_flops"] = model_flops(cfg, shape, model)
+    record["dropped_shardings"] = [
+        f"{l}:{d}:{a}" for (l, d, a) in rules.dropped[:20]]
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    cells = []
+    archs = assigned_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                cells.append((a, s, m == "multi"))
+
+    for arch, shape, multi in cells:
+        mesh_name = "multi" if multi else "single"
+        path = outdir / f"{arch}__{shape}__{mesh_name}.json"
+        if path.exists():
+            print(f"[skip existing] {path.name}")
+            continue
+        print(f"[dryrun] {arch} x {shape} x {mesh_name} ...", flush=True)
+        try:
+            rec = lower_cell(arch, shape, multi)
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                   "status": "error", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+        path.write_text(json.dumps(rec, indent=2))
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            gib = rec["persistent_bytes_per_device"] / 2**30
+            extra = (f" flops={rec['hlo_flops']:.3e}"
+                     f" persistent={gib:.2f}GiB/dev"
+                     f" compile={rec['compile_s']}s")
+        print(f"  -> {status}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

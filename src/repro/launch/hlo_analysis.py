@@ -1,0 +1,116 @@
+"""Parse compiled (post-SPMD) HLO text for collective traffic.
+
+``compiled.as_text()`` shapes are per-device, so the byte totals here are
+per-chip quantities; the roofline collective term is wire_bytes / link_bw.
+
+Wire-byte estimates use ring-algorithm factors with the parsed group size n:
+    all-reduce:          2 (n-1)/n * result_bytes
+    all-gather:            (n-1)/n * result_bytes       (result = gathered)
+    reduce-scatter:        (n-1)   * result_bytes       (input = n * result)
+    all-to-all:            (n-1)/n * result_bytes
+    collective-permute:              result_bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# e.g. "replica_groups={{0,1},{2,3}}" or "replica_groups=[32,16]<=[512]..."
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(txt: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return 2  # unknown: conservative small group
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    result_bytes: dict
+    wire_bytes: dict
+    counts: dict
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.wire_bytes.values())
+
+    @property
+    def total_result_bytes(self) -> int:
+        return sum(self.result_bytes.values())
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    result_bytes = {c: 0 for c in _COLLECTIVES}
+    wire = {c: 0.0 for c in _COLLECTIVES}
+    counts = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "=" not in ls:
+            continue
+        lhs, _, rhs = ls.partition(" = ")
+        # which collective starts the op? ("all-reduce-start" etc. included)
+        op = None
+        for c in _COLLECTIVES:
+            m = re.search(rf"\b{re.escape(c)}(-start|-done)?\(", rhs)
+            if m:
+                if m.group(1) == "-done":
+                    op = None  # avoid double counting start/done pairs
+                else:
+                    op = c
+                break
+        if op is None:
+            continue
+        result_part = rhs.split(op)[0]
+        rb = _shape_bytes(result_part)
+        n = _group_size(ls)
+        counts[op] += 1
+        result_bytes[op] += rb
+        if op == "all-reduce":
+            wire[op] += 2 * (n - 1) / n * rb
+        elif op == "all-gather":
+            wire[op] += (n - 1) / n * rb
+        elif op == "reduce-scatter":
+            wire[op] += (n - 1) * rb
+        elif op == "all-to-all":
+            wire[op] += (n - 1) / n * rb
+        else:  # collective-permute
+            wire[op] += rb
+    return CollectiveStats(result_bytes, wire, counts)
+
+
+def scan_op_histogram(hlo_text: str, ops: tuple[str, ...]) -> dict:
+    """Count occurrences of arbitrary HLO ops (perf-loop diagnostics)."""
+    out = {o: 0 for o in ops}
+    for line in hlo_text.splitlines():
+        for o in ops:
+            if re.search(rf"\b{re.escape(o)}\(", line):
+                out[o] += 1
+    return out

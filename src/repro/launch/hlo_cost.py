@@ -1,0 +1,317 @@
+"""Trip-count-aware HLO cost roll-up.
+
+XLA's built-in ``cost_analysis()`` counts ``while`` bodies ONCE, which
+undercounts scan-over-layers programs by ~num_layers x (verified in
+EXPERIMENTS.md §Dry-run methodology).  This module parses the compiled
+(post-SPMD, per-device-shapes) HLO text, builds the computation call graph,
+and rolls flops / bytes / collective traffic up through ``while`` loops
+using the ``known_trip_count`` backend config (fallback: the loop-condition
+constant).
+
+Conventions:
+  * flops        — dot_general MACs x2, multiplied through loop nests.
+                   (MXU work; elementwise flops are excluded on purpose —
+                   the compute roofline term targets the systolic array.)
+  * bytes        — per top-level instruction: result + operand bytes,
+                   skipping aliasing/no-data ops (parameter, tuple, gte,
+                   bitcast, constant).  Fusion internals are NOT counted
+                   (they live in registers/VMEM); the fusion instruction
+                   itself contributes operands + result.  This approximates
+                   HBM traffic the way HloCostAnalysis does.
+  * collectives  — result-bytes and ring-model wire-bytes by op type,
+                   multiplied through loop nests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_NO_DATA_OPS = frozenset({
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "add-dependency", "opt-barrier", "partition-id",
+    "replica-id",
+})
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "ragged-all-to-all", "collective-permute")
+
+
+def _shape_bytes(txt: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape_dims(txt: str) -> Optional[list[int]]:
+    m = _SHAPE_RE.search(txt)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d.strip()]
+    return dims
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    rtype: str
+    op: str
+    operands: list
+    attrs: str
+
+    @property
+    def result_bytes(self) -> int:
+        return _shape_bytes(self.rtype)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list
+    table: dict  # name -> Instr
+
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\{\s*$")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+)$")
+_OPNAME_RE = re.compile(r"^([\w\-]+)\(")
+
+
+def _split_result_op(rest: str):
+    """'f32[16]{0} dot(%a, %b), attrs' -> (rtype, op, operand_str, attrs)."""
+    rest = rest.strip()
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                rtype, tail = rest[:i + 1], rest[i + 1:].strip()
+                break
+        else:
+            return None
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        rtype, tail = rest[:sp], rest[sp + 1:].strip()
+    m = _OPNAME_RE.match(tail)
+    if not m:
+        return None
+    op = m.group(1)
+    depth = 0
+    start = tail.find("(")
+    for i in range(start, len(tail)):
+        depth += tail[i] == "("
+        depth -= tail[i] == ")"
+        if depth == 0:
+            operand_str = tail[start + 1:i]
+            attrs = tail[i + 1:]
+            break
+    else:
+        operand_str, attrs = "", ""
+    return rtype, op, operand_str, attrs
+
+
+def parse_hlo(text: str) -> dict:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line.strip())
+            if m and "->" in line:
+                cur = Computation(m.group(1), [], {})
+            continue
+        s = line.strip()
+        if s == "}" or s.startswith("} "):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(s)
+        if not m:
+            continue
+        parsed = _split_result_op(m.group(2))
+        if parsed is None:
+            continue
+        rtype, op, operand_str, attrs = parsed
+        operands = re.findall(r"%([\w\.\-]+)", operand_str)
+        ins = Instr(m.group(1), rtype, op, operands, attrs)
+        cur.instrs.append(ins)
+        cur.table[ins.name] = ins
+    return comps
+
+
+def _trip_count(ins: Instr, comps: dict) -> int:
+    m = _TRIP_RE.search(ins.attrs)
+    if m:
+        return int(m.group(1))
+    # fallback: constant in the condition computation's compare
+    m = re.search(r"condition=%?([\w\.\-]+)", ins.attrs)
+    if m and m.group(1) in comps:
+        for ci in comps[m.group(1)].instrs:
+            if ci.op == "constant":
+                mc = re.search(r"constant\((\d+)\)", ci.attrs) or \
+                    re.search(r"constant\((\d+)\)", ci.rtype)
+                if mc:
+                    return int(mc.group(1))
+    return 1
+
+
+def _called_comps(ins: Instr) -> list:
+    out = []
+    for key in ("calls", "body", "to_apply", "branch_computations"):
+        m = re.search(rf"{key}=\{{?([%\w\.\-, ]+)\}}?", ins.attrs)
+        if m:
+            out.extend(re.findall(r"%?([\w\.\-]+)", m.group(1)))
+    return out
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    res_dims = _first_shape_dims(ins.rtype) or []
+    res_elems = 1
+    for d in res_dims:
+        res_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.attrs)
+    if not m or not ins.operands:
+        return 0.0
+    cdims = [int(x) for x in m.group(1).split(",") if x.strip()]
+    lhs = comp.table.get(ins.operands[0])
+    if lhs is None:
+        return 2.0 * res_elems  # unknown K: degenerate
+    ldims = _first_shape_dims(lhs.rtype) or []
+    K = 1
+    for c in cdims:
+        if c < len(ldims):
+            K *= ldims[c]
+    return 2.0 * res_elems * K
+
+
+@dataclasses.dataclass
+class RolledCost:
+    flops: float = 0.0
+    bytes: float = 0.0        # aliasing-aware (DUS/DS count slice bytes)
+    bytes_naive: float = 0.0  # v1 metric: operands+result for every op
+    collective_result_bytes: dict = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in _COLLECTIVES})
+    collective_wire_bytes: dict = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in _COLLECTIVES})
+    collective_counts: dict = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in _COLLECTIVES})
+    dot_count: float = 0.0
+    while_trips: list = dataclasses.field(default_factory=list)
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.collective_wire_bytes.values())
+
+
+def _group_size(attrs: str) -> int:
+    m = _GROUPS_BRACE_RE.search(attrs)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(attrs)
+    if m:
+        return int(m.group(2))
+    return 2
+
+
+def _collective_wire(op: str, rb: float, n: int) -> float:
+    if op == "all-reduce":
+        return 2 * (n - 1) / n * rb
+    if op == "all-gather":
+        return (n - 1) / n * rb
+    if op == "reduce-scatter":
+        return (n - 1) * rb
+    if op in ("all-to-all", "ragged-all-to-all"):
+        return (n - 1) / n * rb
+    return rb  # collective-permute
+
+
+def rollup(text: str) -> RolledCost:
+    comps = parse_hlo(text)
+    entry = None
+    for line in text.splitlines():
+        if line.strip().startswith("ENTRY"):
+            m = _COMP_HDR.match(line.strip().replace("ENTRY ", "", 1))
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None or entry not in comps:
+        # fall back: computation with most instructions
+        entry = max(comps, key=lambda c: len(comps[c].instrs))
+
+    cost = RolledCost()
+
+    def visit(cname: str, mult: float, in_fusion: bool):
+        comp = comps.get(cname)
+        if comp is None:
+            return
+        for ins in comp.instrs:
+            base_op = ins.op.removesuffix("-start").removesuffix("-done")
+            if base_op in _COLLECTIVES and not ins.op.endswith("-done"):
+                rb = ins.result_bytes
+                n = _group_size(ins.attrs)
+                cost.collective_result_bytes[base_op] += mult * rb
+                cost.collective_wire_bytes[base_op] += \
+                    mult * _collective_wire(base_op, rb, n)
+                cost.collective_counts[base_op] += mult
+            if ins.op == "dot":
+                cost.flops += mult * _dot_flops(ins, comp)
+                cost.dot_count += mult
+            if ins.op == "while":
+                trips = _trip_count(ins, comps)
+                cost.while_trips.append(trips)
+                body = re.search(r"body=%?([\w\.\-]+)", ins.attrs)
+                if body:
+                    visit(body.group(1), mult * trips, in_fusion)
+                if not in_fusion:
+                    cost.bytes += mult * ins.result_bytes
+                continue
+            if ins.op == "fusion":
+                # dots inside fusions still count flops (output fusion);
+                # bytes inside do not (registers/VMEM) — the fusion instr
+                # itself contributes operands+result below.
+                for sub in _called_comps(ins):
+                    visit(sub, mult, True)
+            elif ins.op in ("call", "conditional", "map"):
+                for sub in _called_comps(ins):
+                    visit(sub, mult, in_fusion)
+                continue  # bytes accounted inside the callee
+            if in_fusion:
+                continue
+            if ins.op in _NO_DATA_OPS:
+                continue
+            b = ins.result_bytes
+            for opn in ins.operands:
+                src = comp.table.get(opn)
+                if src is not None:
+                    b += src.result_bytes
+            cost.bytes_naive += mult * b
+            # XLA aliases dynamic-(update-)slice in place: actual traffic
+            # is the slice, not the whole buffer (scan output stacking
+            # otherwise dominates the memory term spuriously).
+            if ins.op == "dynamic-update-slice" and len(ins.operands) > 1:
+                upd = comp.table.get(ins.operands[1])
+                ub = upd.result_bytes if upd else 0
+                b = 2 * ub
+            elif ins.op == "dynamic-slice":
+                b = 2 * ins.result_bytes
+            cost.bytes += mult * b
+
+    visit(entry, 1.0, False)
+    return cost

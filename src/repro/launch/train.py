@@ -1,0 +1,98 @@
+"""End-to-end training launcher: OVERLORD data plane + pjit train step.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --reduced \
+        --steps 100 --strategy hybrid_balance
+
+On a multi-host pod-slice this same entry point runs per host (jax
+distributed init), with the OVERLORD actors as a CPU sidecar; on this
+container it runs everything in-process.
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+
+from repro.configs import get_config
+from repro.core import (
+    ClientPlaceTree, CurriculumSchedule, Overlord, OverlordConfig,
+    StaticSchedule,
+)
+from repro.data.cost_models import backbone_cost, encoder_cost
+from repro.data.sources import coyo_like_specs, materialize_group
+from repro.models.model_zoo import build_model
+from repro.train.optimizer import AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-sized config (full configs need the pod)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--strategy", default="backbone_balance",
+                    choices=["vanilla", "backbone_balance",
+                             "hybrid_balance"])
+    ap.add_argument("--dp", type=int, default=4)
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--rows", type=int, default=2)
+    ap.add_argument("--n-bins", type=int, default=1)
+    ap.add_argument("--sources", type=int, default=4)
+    ap.add_argument("--curriculum", action="store_true")
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    if args.reduced:
+        import importlib
+        mod = importlib.import_module(
+            "repro.configs." + args.arch.replace("-", "_"))
+        cfg = mod.reduced()
+    else:
+        cfg = get_config(args.arch)
+    model = build_model(cfg)
+    print(f"arch={cfg.name} params={model.param_count():,}")
+
+    root = tempfile.mkdtemp(prefix="overlord_train_")
+    specs = coyo_like_specs(args.sources)
+    paths = materialize_group(specs, root)
+    names = [s.name for s in specs]
+    if args.curriculum:
+        sched = CurriculumSchedule(
+            easy={names[0]: 1.0},
+            hard={n: 1.0 for n in names[1:]},
+            ramp_steps=max(args.steps // 2, 1))
+    else:
+        sched = StaticSchedule({n: 1.0 for n in names})
+
+    sparams = {"broadcast": ("TP",) if args.tp > 1 else ()}
+    if args.strategy == "hybrid_balance":
+        sparams.update(backbone_costfn=backbone_cost(cfg),
+                       encoder_costfn=encoder_cost(48, 1664))
+    else:
+        sparams.update(costfn=backbone_cost(cfg))
+
+    tree = ClientPlaceTree([("PP", 1), ("DP", args.dp), ("CP", 1),
+                            ("TP", args.tp)])
+    ov = Overlord(paths, tree, sched, OverlordConfig(
+        seq_len=args.seq_len, rows_per_microbatch=args.rows,
+        n_bins=args.n_bins, strategy=args.strategy,
+        strategy_params=sparams, vocab_size=cfg.vocab_size,
+    )).start()
+    try:
+        trainer = Trainer(model, ov, TrainerConfig(
+            steps=args.steps, ckpt_dir=args.ckpt_dir,
+            opt=AdamWConfig(peak_lr=args.lr, warmup_steps=10,
+                            total_steps=max(args.steps, 20))))
+        hist = trainer.train()
+        print(f"final loss {hist[-1]['loss']:.4f} "
+              f"(first {hist[0]['loss']:.4f})")
+        print("memory:", {k: f"{v / 1e6:.1f}MB"
+                          for k, v in ov.memory_report().items()})
+    finally:
+        ov.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,146 @@
+"""Shared building blocks: norms, RoPE, SwiGLU MLP, embeddings, GQA attention
+projections.  Pure functions over params dicts declared with ParamDef.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import (
+    EMBED, HEADS, HEAD_DIM, KV_HEADS, MLP, VOCAB, ParamDef,
+)
+from repro.sharding.logical import shard
+
+
+# --------------------------------------------------------------------- norm
+def rmsnorm_def(dim: int) -> dict:
+    return {"scale": ParamDef((dim,), (None,), init="ones", dtype=jnp.float32)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(dt)
+
+
+def layernorm_def(dim: int) -> dict:
+    return {
+        "scale": ParamDef((dim,), (None,), init="ones", dtype=jnp.float32),
+        "bias": ParamDef((dim,), (None,), init="zeros", dtype=jnp.float32),
+    }
+
+
+def layernorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return out.astype(dt)
+
+
+# --------------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                      # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., s, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                      # (..., s, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- mlp
+def swiglu_def(d_model: int, d_ff: int) -> dict:
+    return {
+        "w_gate": ParamDef((d_model, d_ff), (EMBED, MLP), init="scaled"),
+        "w_up": ParamDef((d_model, d_ff), (EMBED, MLP), init="scaled"),
+        "w_down": ParamDef((d_ff, d_model), (MLP, EMBED), init="scaled"),
+    }
+
+
+def swiglu(p: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = shard(h, "batch", "seq", "act_mlp")
+    return h @ p["w_down"]
+
+
+def gelu_mlp_def(d_model: int, d_ff: int) -> dict:
+    return {
+        "w_up": ParamDef((d_model, d_ff), (EMBED, MLP), init="scaled"),
+        "b_up": ParamDef((d_ff,), (MLP,), init="zeros"),
+        "w_down": ParamDef((d_ff, d_model), (MLP, EMBED), init="scaled"),
+        "b_down": ParamDef((d_model,), (None,), init="zeros"),
+    }
+
+
+def gelu_mlp(p: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(x @ p["w_up"] + p["b_up"])
+    h = shard(h, "batch", "seq", "act_mlp")
+    return h @ p["w_down"] + p["b_down"]
+
+
+# --------------------------------------------------------------- embeddings
+def embedding_def(vocab: int, d_model: int) -> dict:
+    return {"table": ParamDef((vocab, d_model), (VOCAB, EMBED), scale=1.0)}
+
+
+def embed(p: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(p: dict, x: jax.Array) -> jax.Array:
+    logits = x @ p["table"].T
+    return shard(logits, "batch", "seq", "act_vocab")
+
+
+# --------------------------------------------------- attention projections
+def attention_proj_def(cfg) -> dict:
+    hd = cfg.resolved_head_dim()
+    d = {
+        "wq": ParamDef((cfg.d_model, cfg.num_heads, hd),
+                       (EMBED, HEADS, HEAD_DIM), init="scaled"),
+        "wk": ParamDef((cfg.d_model, cfg.num_kv_heads, hd),
+                       (EMBED, KV_HEADS, HEAD_DIM), init="scaled"),
+        "wv": ParamDef((cfg.d_model, cfg.num_kv_heads, hd),
+                       (EMBED, KV_HEADS, HEAD_DIM), init="scaled"),
+        "wo": ParamDef((cfg.num_heads, hd, cfg.d_model),
+                       (HEADS, HEAD_DIM, EMBED), init="scaled"),
+    }
+    if cfg.qk_norm:
+        d["q_norm"] = rmsnorm_def(hd)
+        d["k_norm"] = rmsnorm_def(hd)
+    return d
+
+
+def qkv_project(p: dict, cfg, x: jax.Array,
+                positions: Optional[jax.Array]) -> tuple:
+    """x: (b, s, d) -> q (b,s,H,hd), k/v (b,s,KH,hd) with qk_norm + RoPE."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", "seq", "act_heads", None)
+    k = shard(k, "batch", "seq", "act_kv_heads", None)
+    v = shard(v, "batch", "seq", "act_kv_heads", None)
+    return q, k, v
+
+
+def attn_out_project(p: dict, attn: jax.Array) -> jax.Array:
+    return jnp.einsum("bshk,hkd->bsd", attn, p["wo"])

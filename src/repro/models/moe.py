@@ -1,0 +1,166 @@
+"""Token-choice top-k MoE with ROW-LOCAL capacity dispatch.
+
+Design notes (TPU adaptation + §Perf iteration log in EXPERIMENTS.md):
+  * No GShard one-hot dispatch einsums — they cost g*E*C*d MAC flops and
+    poison the HLO-FLOPs roofline.
+  * Capacity is per BATCH ROW (C_row = ceil(cf * s * k / E)), so the
+    scatter into the dispatch buffer indexes [row, expert, slot] and rows
+    are batch-sharded: every scatter/gather is shard-LOCAL.  The only
+    cross-chip movement is an explicit sharding transpose of the buffer
+    (batch-sharded -> expert-sharded), which GSPMD lowers to the inherent
+    all-to-all of expert parallelism.  The original global-capacity
+    formulation made GSPMD all-reduce a (E, C_global, d) buffer across the
+    data axis: 12.9 TB/device wire per step on qwen3-moe-30b (measured,
+    see EXPERIMENTS.md §Perf iteration 1) vs ~0.5 TB for this layout.
+  * Experts padded to a multiple of EXPERT_PAD so the expert dim shards
+    16-way (granite's 40 -> 48); dead experts get no tokens.
+  * Overflow tokens drop into slot C_row (zeroed before combine).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import EMBED, EXPERT, MLP, ParamDef
+from repro.sharding.logical import shard
+
+EXPERT_PAD = 16  # pad experts to a multiple of the tensor-axis size
+
+
+def padded_experts(cfg) -> int:
+    return int(math.ceil(cfg.num_experts / EXPERT_PAD) * EXPERT_PAD)
+
+
+def moe_def(cfg) -> dict:
+    d, dff = cfg.d_model, cfg.d_ff
+    ep = padded_experts(cfg)
+    return {
+        "router": ParamDef((d, cfg.num_experts), (EMBED, None),
+                           init="scaled", dtype=jnp.float32),
+        "w_gate": ParamDef((ep, d, dff), (EXPERT, EMBED, MLP), init="scaled"),
+        "w_up": ParamDef((ep, d, dff), (EXPERT, EMBED, MLP), init="scaled"),
+        "w_down": ParamDef((ep, dff, d), (EXPERT, MLP, EMBED), init="scaled"),
+    }
+
+
+def row_capacity(cfg, seq_len: int) -> int:
+    c = int(math.ceil(cfg.capacity_factor * seq_len
+                      * cfg.experts_per_token / cfg.num_experts))
+    return max(c, 1)
+
+
+# ------------------------------------------------------- local dispatch
+def _dispatch_local(x, ids, dest, ep: int, C: int):
+    """Pure-local SINGLE scatter into the dispatch buffer.
+    x: (b, s, d); ids: (b, s, k); dest: (b, s*k) -> (b, ep, C+1, d).
+    One scatter over all (token, choice) pairs: a k-iteration scatter loop
+    reads+writes the full buffer k times (measured 43 GB/layer/device on
+    qwen3-moe, §Perf iteration 4)."""
+    b, s, d = x.shape
+    k = ids.shape[2]
+    rows = jnp.arange(b)[:, None]
+    idf = ids.reshape(b, s * k)                       # token-major (s, k)
+    x_rep = jnp.broadcast_to(x[:, :, None, :], (b, s, k, d)) \
+        .reshape(b, s * k, d)
+    buf = jnp.zeros((b, ep, C + 1, d), x.dtype)
+    return buf.at[rows, idf, dest].add(x_rep, mode="drop")
+
+
+def _combine_local(out_buf, ids, dest, weights):
+    """Pure-local single gather + weighted combine.
+    out_buf: (b, ep, C+1, d) -> (b, s, d) fp32."""
+    b, s, k = ids.shape
+    d = out_buf.shape[-1]
+    rows = jnp.arange(b)[:, None]
+    idf = ids.reshape(b, s * k)
+    gathered = out_buf[rows, idf, dest].reshape(b, s, k, d)
+    return jnp.sum(weights[..., None]
+                   * gathered.astype(jnp.float32), axis=2)
+
+
+def _shmap_batch(fn, args, extra, out_rank4: bool):
+    """Run ``fn`` per batch shard via shard_map when a mesh is active
+    (indices are row-local, so the body needs no collectives); plain call
+    otherwise (tests on one device)."""
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding.logical import current_rules
+    rules = current_rules()
+    if rules is None or rules.mesh is None:
+        return fn(*args, *extra)
+    mesh = rules.mesh
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bsz = args[0].shape[0]
+    n = 1
+    for a in batch_axes:
+        n *= mesh.shape[a]
+    if not batch_axes or bsz % n != 0:
+        return fn(*args, *extra)
+    in_specs = tuple(P(batch_axes, *([None] * (a.ndim - 1)))
+                     for a in args)
+    out_specs = P(batch_axes, None, None, None) if out_rank4 \
+        else P(batch_axes, None, None)
+    body = lambda *xs: fn(*xs, *extra)
+    return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)(*args)
+
+
+def moe_block(p: dict, cfg, x: jax.Array, *, global_tokens: int = 0,
+              router_aux: bool = True):
+    """x: (b, s, d) -> (out (b, s, d), aux_loss scalar fp32)."""
+    b, s, d = x.shape
+    k = cfg.experts_per_token
+    E = cfg.num_experts
+    ep = padded_experts(cfg)
+    C = row_capacity(cfg, s)
+
+    logits = x.astype(jnp.float32) @ p["router"]              # (b, s, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, k)                    # (b, s, k)
+    weights = weights / jnp.maximum(
+        jnp.sum(weights, -1, keepdims=True), 1e-9)            # renormalize
+
+    # slot position of each (token, choice) within (row, expert)
+    idf = ids.reshape(b, s * k)                               # (b, g)
+    oh = jax.nn.one_hot(idf, E, dtype=jnp.int32)              # (b, g, E)
+    pos_all = jnp.cumsum(oh, axis=1) - oh
+    pos = jnp.take_along_axis(pos_all, idf[..., None], axis=2)[..., 0]
+    dest = jnp.minimum(pos, C)                                # C = overflow
+
+    # row-local scatter.  GSPMD lowers a scatter over a sharded batch dim
+    # conservatively (full-buffer all-reduce PER scatter — measured 12.9
+    # TB/step on qwen3-moe; EXPERIMENTS.md §Perf it.2), so dispatch and
+    # combine run INSIDE shard_map: indices are row-local by construction,
+    # making both pure local memory ops.  The only collective left is the
+    # buffer's sharding transpose (batch-sharded -> expert-sharded), the
+    # inherent all-to-all of expert parallelism.
+    buf = _shmap_batch(_dispatch_local, (x, ids, dest),
+                       extra=(ep, C), out_rank4=True)
+    # (no intermediate batch-sharded constraint here: shard_map's
+    # out_specs already pin the layout, and an extra constraint makes
+    # GSPMD materialize it separately in fwd AND remat-bwd — measured
+    # +775 GB of collective-permute traffic, §Perf iteration 3)
+
+    # sharding transpose + batched expert SwiGLU
+    buf_e = shard(buf, None, "act_expert", "cap", None)
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf_e, p["w_gate"])) \
+        * jnp.einsum("becd,edf->becf", buf_e, p["w_up"])
+    h = shard(h, None, "act_expert", "cap", "act_mlp")
+    out_e = jnp.einsum("becf,efd->becd", h, p["w_down"])
+    out_e = out_e.at[:, :, C].set(0.0)                        # drop overflow
+    # transpose back and combine (row-local gathers)
+    out_buf = shard(out_e, "batch", None, "cap", None)
+    out = _shmap_batch(_combine_local, (out_buf, ids, dest, weights),
+                       extra=(), out_rank4=False)
+
+    aux = jnp.float32(0.0)
+    if router_aux:
+        # standard load-balancing loss: E * sum_e f_e * p_e
+        me = jnp.mean(probs, axis=(0, 1))                     # (E,)
+        fe = jnp.mean(jnp.sum(
+            jax.nn.one_hot(ids, E, dtype=jnp.float32), axis=2),
+            axis=(0, 1)) / k                                  # (E,)
+        aux = E * jnp.sum(me * fe)
+
+    return out.astype(x.dtype), aux

@@ -1,0 +1,115 @@
+"""Trainer: OVERLORD data plane -> jit'd train step, with unified
+checkpointing (model state + data-plane state snapshot together, so a
+restart resumes both consistently).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import pickle
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.orchestrator import Overlord
+from repro.models.model_zoo import Model, build_model
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import (
+    TrainState, init_train_state, make_train_step,
+)
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    opt: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+
+
+class Trainer:
+    """Single-process trainer consuming OVERLORD batches.
+
+    On a real pod-slice every host runs this loop; per-host constructors
+    feed local shards and `jax.make_array_from_process_local_data` forms
+    the global arrays.  On this one-device container the loop assembles
+    the global batch from all buckets directly.
+    """
+
+    def __init__(self, model: Model, overlord: Overlord,
+                 cfg: TrainerConfig = TrainerConfig(), seed: int = 0):
+        self.model = model
+        self.ov = overlord
+        self.cfg = cfg
+        self.state = init_train_state(model, jax.random.key(seed))
+        self.step_fn = jax.jit(make_train_step(model, cfg.opt))
+        self.history: list[dict] = []
+
+    def _assemble_global_batch(self, step: int) -> dict:
+        """Pull every data-fetching client's view; concatenate bucket/bin
+        rows into the global batch."""
+        axis = self.ov.cfg.strategy_params.get("axis", "DP")
+        parts = []
+        for rank in self.ov.tree.data_fetching_clients(axis):
+            view = self.ov.get_batch(step, rank)
+            if view["role"] != "data" or view.get("cp_rank", 0) != 0:
+                continue
+            for b in view["bins"]:
+                parts.append(b)
+        tokens = np.concatenate([p.tokens for p in parts], 0)
+        seg = np.concatenate([p.segment_ids for p in parts], 0)
+        pos = np.concatenate([p.positions for p in parts], 0)
+        labels = np.concatenate([p.labels for p in parts], 0)
+        return {"tokens": tokens, "segment_ids": seg, "positions": pos,
+                "labels": labels}
+
+    def train(self, steps: Optional[int] = None) -> list[dict]:
+        steps = steps or self.cfg.steps
+        for step in range(steps):
+            t0 = time.time()
+            batch = self._assemble_global_batch(step)
+            fetch_s = time.time() - t0
+            t1 = time.time()
+            self.state, metrics = self.step_fn(self.state, batch)
+            loss = float(metrics["loss"])
+            rec = {"step": step, "loss": loss,
+                   "accuracy": float(metrics["accuracy"]),
+                   "grad_norm": float(metrics["grad_norm"]),
+                   "fetch_s": round(fetch_s, 4),
+                   "step_s": round(time.time() - t1, 4)}
+            self.history.append(rec)
+            self.ov.step_done(step, {"loss": loss})
+            if step % self.cfg.log_every == 0:
+                print(f"step {step:5d} loss {loss:8.4f} "
+                      f"acc {rec['accuracy']:.3f} "
+                      f"fetch {fetch_s*1e3:6.1f}ms "
+                      f"step {rec['step_s']*1e3:7.1f}ms", flush=True)
+            if self.cfg.ckpt_dir and step and \
+                    step % self.cfg.ckpt_every == 0:
+                self.save_checkpoint(step)
+        return self.history
+
+    # ------------------------------------------------- unified checkpoint
+    def save_checkpoint(self, step: int):
+        os.makedirs(self.cfg.ckpt_dir, exist_ok=True)
+        flat, treedef = jax.tree.flatten(self.state)
+        np.savez(os.path.join(self.cfg.ckpt_dir, f"model_{step}.npz"),
+                 *[np.asarray(x) for x in flat])
+        with open(os.path.join(self.cfg.ckpt_dir, f"meta_{step}.pkl"),
+                  "wb") as f:
+            pickle.dump({"step": step}, f)
+
+    def load_checkpoint(self, step: int):
+        data = np.load(os.path.join(self.cfg.ckpt_dir,
+                                    f"model_{step}.npz"))
+        flat = [data[k] for k in data.files]
+        treedef = jax.tree.structure(self.state)
+        leaves = jax.tree.leaves(self.state)
+        self.state = jax.tree.unflatten(
+            treedef, [jnp.asarray(a, l.dtype)
+                      for a, l in zip(flat, leaves)])

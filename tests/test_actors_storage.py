@@ -1,0 +1,119 @@
+"""Actor runtime semantics + columnar storage roundtrip/accounting."""
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.actors import Actor, ActorDied, ActorRuntime
+from repro.data import storage
+from repro.data.sources import SourceSpec, materialize_source
+
+
+class Counter(Actor):
+    def __init__(self):
+        self.n = 0
+
+    def bump(self, k=1):
+        self.n += k
+        return self.n
+
+    def boom(self):
+        raise ValueError("boom")
+
+    def memory_bytes(self):
+        return 1234
+
+
+@pytest.fixture
+def runtime():
+    rt = ActorRuntime(heartbeat_interval=0.01)
+    yield rt
+    rt.shutdown()
+
+
+def test_call_cast_and_exceptions(runtime):
+    h = runtime.spawn("c", Counter())
+    assert h.call("bump") == 1
+    h.cast("bump", 5)
+    assert h.call("bump") == 7      # mailbox is ordered
+    with pytest.raises(ValueError):
+        h.call("boom")
+    assert h.call("memory_bytes") == 1234
+
+
+def test_kill_fails_pending_futures_and_fires_supervision(runtime):
+    h = runtime.spawn("c", Counter())
+    failures = []
+    runtime.on_failure(lambda n, hh: failures.append(n))
+    fut = h.call_async("bump")
+    fut.result(timeout=1)
+    h.kill()
+    deadline = time.time() + 2
+    while h.alive and time.time() < deadline:
+        time.sleep(0.01)
+    assert not h.alive
+    with pytest.raises(ActorDied):
+        h.call("bump")
+    deadline = time.time() + 2
+    while not failures and time.time() < deadline:
+        time.sleep(0.01)
+    assert failures == ["c"]
+    # respawn under the same name works after death
+    h2 = runtime.spawn("c", Counter())
+    assert h2.call("bump") == 1
+
+
+def test_reassign(runtime):
+    h = runtime.spawn("a", Counter())
+    runtime.reassign("a", "b")
+    assert runtime.get("b") is h
+    with pytest.raises(KeyError):
+        runtime.get("a")
+
+
+# ------------------------------------------------------------- storage
+def test_storage_roundtrip(tmp_path):
+    recs = [{"sample_id": f"s{i}", "text_tokens": i + 1, "image_tokens": 0,
+             "modality": "text", "transform_cost": 1.0, "payload": b"xy",
+             "seed": i} for i in range(100)]
+    path = str(tmp_path / "t.colstore")
+    footer = storage.write_source(path, recs, row_group_rows=16)
+    assert footer["num_rows"] == 100
+    with storage.SourceReader(path) as r:
+        assert r.num_rows == 100
+        out = r.read(5)
+        assert [o["sample_id"] for o in out] == [f"s{i}" for i in range(5)]
+        # wrap-around epoch semantics
+        r.seek(98)
+        out = r.read(4)
+        assert [o["sample_id"] for o in out] == ["s98", "s99", "s0", "s1"]
+        assert r.access_state_bytes > 8192  # socket + footer + buffer
+
+
+def test_storage_sharding_partitions_rows(tmp_path):
+    recs = [{"sample_id": f"s{i}", "text_tokens": 1, "image_tokens": 0,
+             "modality": "text", "transform_cost": 1.0, "payload": b"",
+             "seed": i} for i in range(64)]
+    path = str(tmp_path / "t.colstore")
+    storage.write_source(path, recs, row_group_rows=8)
+    seen = set()
+    total = 0
+    for i in range(2):
+        with storage.SourceReader(path, shard=(i, 2)) as r:
+            total += r.num_rows
+            for rec in r.read(r.num_rows):
+                seen.add(rec["sample_id"])
+    assert total == 64 and len(seen) == 64
+
+
+def test_open_reader_accounting(tmp_path):
+    spec = SourceSpec("acc_test", "text", n_samples=32)
+    path = materialize_source(spec, str(tmp_path))
+    base = storage.open_reader_count()
+    r1 = storage.SourceReader(path)
+    r2 = storage.SourceReader(path)
+    assert storage.open_reader_count() == base + 2
+    assert storage.open_access_state_bytes() >= r1.access_state_bytes
+    r1.close(), r2.close()
+    assert storage.open_reader_count() == base

@@ -1,0 +1,89 @@
+"""Property-based tests for the balancing core (the paper's scheduler)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.balance import (
+    balance_items, bin_loads, greedy_binpack, imbalance, karmarkar_karp,
+    multi_greedy_binpack,
+)
+
+costs_strategy = st.lists(
+    st.floats(min_value=0.0, max_value=1e6, allow_nan=False,
+              allow_infinity=False),
+    min_size=1, max_size=200)
+
+
+@given(costs_strategy, st.integers(1, 16))
+@settings(max_examples=100, deadline=None)
+def test_greedy_assignment_valid(costs, n_bins):
+    assign = greedy_binpack(costs, n_bins)
+    assert len(assign) == len(costs)
+    assert all(0 <= a < n_bins for a in assign)
+    # conservation: every item assigned exactly once
+    assert sum(bin_loads(costs, assign, n_bins)) == pytest.approx(
+        sum(costs), rel=1e-6, abs=1e-6)
+
+
+@given(costs_strategy, st.integers(1, 8))
+@settings(max_examples=100, deadline=None)
+def test_greedy_within_4_3_of_round_robin(costs, n_bins):
+    """LPT is 4/3-of-OPT, hence within 4/3 of ANY assignment's max load
+    (instance-wise dominance over round-robin does not hold in general)."""
+    assign = greedy_binpack(costs, n_bins)
+    rr = [i % n_bins for i in range(len(costs))]
+    g = max(bin_loads(costs, assign, n_bins))
+    r = max(bin_loads(costs, rr, n_bins))
+    assert g <= 4.0 / 3.0 * r + 1e-6
+
+
+@given(costs_strategy, st.integers(1, 8))
+@settings(max_examples=50, deadline=None)
+def test_greedy_within_4_3_of_lower_bound(costs, n_bins):
+    """LPT is a 4/3-approx: max load <= 4/3 * OPT + max item slack."""
+    assign = greedy_binpack(costs, n_bins)
+    got = max(bin_loads(costs, assign, n_bins))
+    lower = max(sum(costs) / n_bins, max(costs) if costs else 0.0)
+    assert got <= 4.0 / 3.0 * lower + 1e-6
+
+
+@given(st.lists(st.floats(min_value=0.1, max_value=1e4), min_size=2,
+                max_size=40), st.integers(2, 6))
+@settings(max_examples=50, deadline=None)
+def test_karmarkar_karp_valid_and_competitive(costs, n_bins):
+    kk = karmarkar_karp(costs, n_bins)
+    assert len(kk) == len(costs)
+    assert all(0 <= a < n_bins for a in kk)
+    assert sum(bin_loads(costs, kk, n_bins)) == pytest.approx(sum(costs))
+    # KK should not be wildly worse than greedy
+    kk_max = max(bin_loads(costs, kk, n_bins))
+    g_max = max(bin_loads(costs, greedy_binpack(costs, n_bins), n_bins))
+    assert kk_max <= 2.0 * g_max + 1e-6
+
+
+@given(st.lists(st.tuples(st.floats(0, 1e4), st.floats(0, 1e4)),
+                min_size=1, max_size=60), st.integers(1, 8))
+@settings(max_examples=50, deadline=None)
+def test_multi_greedy_valid(vectors, n_bins):
+    assign = multi_greedy_binpack(vectors, n_bins)
+    assert len(assign) == len(vectors)
+    assert all(0 <= a < n_bins for a in assign)
+
+
+def test_balance_reduces_imbalance_on_skewed_data():
+    rng = np.random.default_rng(0)
+    costs = np.square(rng.lognormal(3.0, 1.2, 512)).tolist()
+    n = 16
+    rr = [i % n for i in range(len(costs))]
+    base = imbalance(bin_loads(costs, rr, n))
+    bal_loads = bin_loads(costs, greedy_binpack(costs, n), n)
+    assert imbalance(bal_loads) < base
+    # LPT lands within 4/3 of the theoretical lower bound even under the
+    # heavy-tailed quadratic-cost skew (a single giant doc can dominate)
+    lower = max(max(costs), sum(costs) / n)
+    assert max(bal_loads) <= 4.0 / 3.0 * lower
+
+
+def test_unknown_method_raises():
+    with pytest.raises(ValueError):
+        balance_items([1.0], 2, "nope")

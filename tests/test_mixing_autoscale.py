@@ -1,0 +1,101 @@
+"""Mixture schedules + two-phase autoscaling."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.autoscale import (
+    PartitionLimits, SourceProfile, auto_partition,
+)
+from repro.core.mixing import (
+    AdaptiveSchedule, CurriculumSchedule, StagedSchedule, StaticSchedule,
+    sample_counts,
+)
+
+w_strategy = st.dictionaries(
+    st.sampled_from([f"s{i}" for i in range(6)]),
+    st.floats(0.0, 100.0, allow_nan=False), min_size=1, max_size=6)
+
+
+@given(w_strategy, st.integers(0, 10_000))
+@settings(max_examples=60, deadline=None)
+def test_static_schedule_normalized(ratios, step):
+    w = StaticSchedule(ratios).weights(step)
+    assert abs(sum(w.values()) - 1.0) < 1e-9
+    assert all(v >= 0 for v in w.values())
+
+
+def test_staged_schedule_transitions():
+    s = StagedSchedule([(10, {"a": 1.0}), (20, {"b": 1.0})])
+    assert s.weights(5)["a"] == 1.0
+    assert s.weights(15)["b"] == 1.0
+    assert s.weights(99)["b"] == 1.0
+
+
+def test_curriculum_monotone_ramp():
+    s = CurriculumSchedule(easy={"e": 1.0}, hard={"h": 1.0}, ramp_steps=100)
+    hw = [s.weights(t).get("h", 0.0) for t in range(0, 101, 10)]
+    assert hw == sorted(hw)
+    assert hw[0] == 0.0 and abs(hw[-1] - 1.0) < 1e-9
+
+
+def test_adaptive_boosts_lossy_source():
+    s = AdaptiveSchedule({"a": 0.5, "b": 0.5}, temperature=0.5)
+    for t in range(20):
+        s.observe(t, {"per_source_loss": {"a": 4.0, "b": 1.0}})
+    w = s.weights(20)
+    assert w["a"] > w["b"]
+
+
+@given(w_strategy, st.integers(1, 4096))
+@settings(max_examples=60, deadline=None)
+def test_sample_counts_sum(ratios, total):
+    rng = np.random.default_rng(0)
+    counts = sample_counts(ratios, total, rng)
+    assert sum(counts.values()) == total
+    assert all(v >= 0 for v in counts.values())
+
+
+# ------------------------------------------------------- auto-partition
+def _profiles(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [SourceProfile(f"s{i}", float(rng.lognormal(2, 1)),
+                          int(rng.integers(1 << 20, 1 << 24)))
+            for i in range(n)]
+
+
+@given(st.integers(1, 40), st.integers(4, 64), st.integers(1, 8))
+@settings(max_examples=40, deadline=None)
+def test_auto_partition_respects_bounds(n_sources, total_workers, w_actor):
+    limits = PartitionLimits(total_workers=total_workers, w_actor=w_actor,
+                             w_src=16)
+    cfgs = auto_partition(_profiles(n_sources), limits)
+    assert cfgs, "every source must get at least one loader"
+    by_source = {}
+    for c in cfgs:
+        by_source.setdefault(c.source, []).append(c)
+        assert 1 <= c.workers <= w_actor
+    assert len(by_source) == n_sources
+    for src, lst in by_source.items():
+        # shards are a consistent (i, n) partition
+        n = lst[0].shard_count
+        assert sorted(c.shard_index for c in lst) == list(range(n))
+        assert sum(c.workers for c in lst) <= limits.w_src * max(n, 1)
+
+
+def test_expensive_sources_get_more_workers():
+    profiles = [SourceProfile("cheap", 1.0, 1 << 20),
+                SourceProfile("mid", 10.0, 1 << 20),
+                SourceProfile("pricey", 300.0, 1 << 20)]
+    cfgs = auto_partition(profiles, PartitionLimits(
+        total_workers=32, w_actor=4, cluster_size=1))
+    per = {}
+    for c in cfgs:
+        per[c.source] = per.get(c.source, 0) + c.workers
+    assert per["pricey"] >= per["mid"] >= per["cheap"]
+
+
+def test_memory_budget_forces_sharding():
+    big = SourceProfile("big", 5.0, 1 << 30)
+    cfgs = auto_partition([big], PartitionLimits(
+        total_workers=8, memory_budget=1 << 28))
+    assert cfgs[0].shard_count >= 2

@@ -1,0 +1,94 @@
+"""ClientPlaceTree parallelism transformations + DGraph lifecycle."""
+import pytest
+
+from repro.core.dgraph import DGraph
+from repro.core.placetree import ClientPlaceTree
+
+
+def tree4d():
+    return ClientPlaceTree([("PP", 2), ("DP", 4), ("CP", 2), ("TP", 2)])
+
+
+def test_coords_roundtrip():
+    t = tree4d()
+    for rank in range(t.world):
+        assert t.rank_of(t.coords(rank)) == rank
+
+
+def test_buckets_and_clients():
+    t = tree4d()
+    assert t.world == 32
+    assert t.nodes_at("DP") == 8        # PP x DP
+    assert t.buckets("DP", group_size=2) == 4
+    assert t.nodes_at("WORLD") == 32
+    clients = t.clients_under("DP", 0)
+    assert len(clients) == 32 // 8
+    # all clients of one bucket share PP and DP coords
+    c0 = t.coords(clients[0])
+    for c in clients[1:]:
+        cc = t.coords(c)
+        assert cc["PP"] == c0["PP"] and cc["DP"] == c0["DP"]
+
+
+def test_client_views_pp_metadata_and_broadcast():
+    t = tree4d()
+    t.set_broadcast(["TP"])
+    roles = {}
+    for rank in range(t.world):
+        v = t.client_view(rank, "DP")
+        roles.setdefault(v.role, []).append(rank)
+        c = t.coords(rank)
+        if c["TP"] != 0:
+            assert v.role == "none"          # suppressed by broadcast
+        elif c["PP"] != 0:
+            assert v.role == "metadata"      # pipeline stage > 0
+        else:
+            assert v.role == "data"
+            assert v.cp_degree == 2 and v.cp_rank == c["CP"]
+    # exactly PP0 x DP x CP clients fetch data
+    assert len(roles["data"]) == 4 * 2
+    # redundancy eliminated: data fetchers / world
+    assert len(t.data_fetching_clients("DP")) == 8
+
+
+def test_unknown_axis_raises():
+    t = tree4d()
+    with pytest.raises(KeyError):
+        t.nodes_at("EP")
+    with pytest.raises(KeyError):
+        t.set_broadcast(["XX"])
+
+
+def _meta(n):
+    return [{"sample_id": f"s{i}", "source": f"src{i % 3}",
+             "modality": "image" if i % 2 else "text",
+             "text_tokens": 10 + i, "image_tokens": (i % 2) * 50}
+            for i in range(n)]
+
+
+def test_dgraph_lifecycle_and_lineage():
+    g = DGraph.from_buffer(_meta(12))
+    g.with_cost(lambda m: float(m["text_tokens"] ** 2))
+    g.assign_buckets([i % 4 for i in range(12)])
+    for b, nodes in g.by_bucket().items():
+        g.assign_bins(nodes, [0] * len(nodes))
+    lin = g.lineage("s3")
+    kinds = [k for k, _ in lin]
+    assert "cost" in kinds and "bucket" in kinds and "bin" in kinds
+    dot = g.to_dot()
+    assert "digraph" in dot and "s0" in dot
+
+
+def test_dgraph_derive_shares_nodes():
+    g = DGraph.from_buffer(_meta(10))
+    img = g.derive("image", lambda m: m["image_tokens"] > 0)
+    assert 0 < len(img) < len(g)
+    img.with_cost(lambda m: float(m["image_tokens"]))
+    # mutation visible through the parent graph (shared nodes)
+    costed = [n for n in g.nodes if n.cost > 0]
+    assert len(costed) == len(img)
+
+
+def test_dgraph_select_view():
+    g = DGraph.from_buffer(_meta(10), select=lambda m: m["modality"] == "text")
+    assert all(n.meta["modality"] == "text" for n in g.nodes)

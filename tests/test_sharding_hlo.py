@@ -1,0 +1,104 @@
+"""Logical sharding rules (divisibility fallback) + HLO cost roll-up."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.hlo_cost import rollup
+from repro.launch.mesh import make_local_mesh
+from repro.sharding.logical import (
+    DECODE_RULES, TRAIN_RULES, ShardingRules, use_rules,
+)
+
+
+class FakeMesh:
+    """Shape-only stand-in so rule resolution is testable without devices."""
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def test_divisible_dims_shard():
+    rules = ShardingRules(FakeMesh({"data": 16, "model": 16}), TRAIN_RULES)
+    spec = rules.spec(("embed", "mlp"), (4096, 12288))
+    assert spec == P(("data",), "model")
+
+
+def test_indivisible_dims_fall_back_to_replication():
+    rules = ShardingRules(FakeMesh({"data": 16, "model": 16}), TRAIN_RULES)
+    # 40 rwkv heads / 24 granite heads cannot shard 16-way
+    spec = rules.spec(("heads", None), (24, 64))
+    assert spec == P(None, None)
+    assert rules.dropped and rules.dropped[0][0] == "heads"
+
+
+def test_multi_axis_prefix_fallback():
+    # batch maps to (pod, data); batch=16 divides data(16) but not 32
+    rules = ShardingRules(
+        FakeMesh({"pod": 2, "data": 16, "model": 16}), TRAIN_RULES)
+    spec = rules.spec(("batch", "seq"), (16, 128))
+    assert spec == P("pod", None) or spec == P(("pod",), None)
+
+
+def test_no_mesh_axis_used_twice():
+    rules = ShardingRules(FakeMesh({"data": 4, "model": 4}), TRAIN_RULES)
+    # expert and mlp both map to model; second one must not reuse it
+    spec = rules.spec(("expert", "embed", "mlp"), (8, 64, 64))
+    flat = []
+    for s in spec:
+        if s is None:
+            continue
+        flat.extend(s if isinstance(s, tuple) else (s,))
+    assert len(flat) == len(set(flat))
+
+
+def test_decode_rules_shard_kv_seq():
+    rules = ShardingRules(FakeMesh({"data": 16, "model": 16}),
+                          DECODE_RULES)
+    spec = rules.spec(("batch", "kv_seq", "act_kv_heads", None),
+                      (128, 32768, 8, 128))
+    assert spec[1] == "model" or spec[1] == ("model",)
+
+
+def test_shard_noop_outside_context():
+    from repro.sharding.logical import shard
+    x = jnp.ones((4, 4))
+    assert shard(x, "batch", None) is x
+
+
+# ------------------------------------------------------------ hlo_cost
+def test_rollup_exact_on_nested_scan():
+    def nested(w, x):
+        def outer(h, _):
+            def inner(h2, _):
+                return jnp.tanh(h2 @ w), None
+            h2, _ = jax.lax.scan(inner, h, None, length=3)
+            return h2, None
+        h, _ = jax.lax.scan(outer, x, None, length=5)
+        return h
+
+    W = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+    c = jax.jit(nested).lower(W, x).compile()
+    r = rollup(c.as_text())
+    assert r.flops == 2 * 8 * 64 * 64 * 15
+    assert sorted(r.while_trips) == [3, 5]
+    assert r.bytes > 0
+
+
+def test_rollup_counts_collectives_through_loops():
+    mesh = make_local_mesh()
+    if mesh.devices.size < 1:
+        pytest.skip("no devices")
+
+    def fn(x):
+        def body(h, _):
+            return h @ x, None
+        h, _ = jax.lax.scan(body, x, None, length=4)
+        return h.sum()
+
+    x = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+    c = jax.jit(fn).lower(x).compile()
+    r = rollup(c.as_text())
+    assert r.flops == 2 * 8 * 8 * 8 * 4

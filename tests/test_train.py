@@ -1,0 +1,83 @@
+"""Optimizer correctness + loss-goes-down integration."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from conftest import make_lm_batch
+from repro.train.optimizer import (
+    AdamWConfig, adamw_update, init_adamw, lr_schedule,
+)
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def test_adamw_matches_reference_formulas():
+    cfg = AdamWConfig(peak_lr=1e-2, warmup_steps=0, total_steps=10**9,
+                      weight_decay=0.0, clip_norm=1e9, min_lr_ratio=1.0)
+    p = {"w": jnp.array([1.0, -2.0])}
+    g = {"w": jnp.array([0.5, 0.25])}
+    st = init_adamw(p)
+    new_p, st1, _ = adamw_update(cfg, g, st, p)
+    # step 1: mhat = g, vhat = g^2  ->  update = lr * g/(|g|+eps)
+    exp = np.array([1.0, -2.0]) - 1e-2 * np.array([0.5, 0.25]) / (
+        np.abs([0.5, 0.25]) + cfg.eps)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), exp, rtol=1e-5)
+    assert int(st1.step) == 1
+
+
+def test_grad_clipping_bounds_update():
+    cfg = AdamWConfig(clip_norm=1.0, warmup_steps=0, weight_decay=0.0)
+    p = {"w": jnp.zeros((4,))}
+    g = {"w": jnp.full((4,), 1e6)}
+    _, st1, metrics = adamw_update(cfg, g, init_adamw(p), p)
+    assert float(metrics["grad_norm"]) > 1e6
+    # clipped first moment: |m| <= (1-b1) * clip_norm
+    assert float(jnp.max(jnp.abs(st1.mu["w"]))) <= 0.11
+
+
+def test_lr_schedule_shape():
+    cfg = AdamWConfig(peak_lr=1.0, warmup_steps=10, total_steps=110,
+                      min_lr_ratio=0.1)
+    lrs = [float(lr_schedule(cfg, jnp.int32(t))) for t in
+           (0, 5, 10, 60, 110)]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0)
+    assert 0.1 < lrs[3] < 1.0
+    assert lrs[4] == pytest.approx(0.1, rel=1e-3)
+
+
+def test_loss_decreases_tiny_model():
+    from repro.configs.qwen3_8b import reduced
+    from repro.models.model_zoo import build_model
+    cfg = reduced().replace(num_layers=2)
+    model = build_model(cfg)
+    state = init_train_state(model, jax.random.key(0))
+    step = jax.jit(make_train_step(model, AdamWConfig(
+        peak_lr=5e-3, warmup_steps=5, total_steps=100)))
+    batch = make_lm_batch(cfg, 4, 64, seed=3)
+    losses = []
+    for _ in range(12):
+        state, metrics = step(state, batch)   # memorize one batch
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] * 0.8, losses
+    assert np.isfinite(losses).all()
+
+
+def test_moe_train_step_routes_and_learns():
+    from repro.configs.qwen3_moe_30b_a3b import reduced
+    from repro.models.model_zoo import build_model
+    cfg = reduced()
+    model = build_model(cfg)
+    state = init_train_state(model, jax.random.key(0))
+    step = jax.jit(make_train_step(model, AdamWConfig(peak_lr=5e-3,
+                                                      warmup_steps=2)))
+    batch = make_lm_batch(cfg, 4, 64, seed=4)
+    losses, auxes = [], []
+    for _ in range(8):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+        auxes.append(float(m["aux_loss"]))
+    assert losses[-1] < losses[0]
+    # aux loss stays near 1.0-ish (balanced routing) and finite
+    assert all(np.isfinite(a) and a < 16.0 for a in auxes)
