@@ -56,11 +56,22 @@ class OverlordConfig:
 class Overlord:
     def __init__(self, source_paths: dict[str, str],
                  tree: ClientPlaceTree, schedule: MixSchedule,
-                 cfg: OverlordConfig = OverlordConfig()):
+                 cfg: OverlordConfig = OverlordConfig(),
+                 validate: bool = True):
         self.paths = dict(source_paths)
         self.tree = tree
         self.schedule = schedule
         self.cfg = cfg
+        # static analysis before anything is spawned: a bad composition
+        # fails here with findings instead of hanging the first step
+        # (docs/ANALYSIS.md; disable with validate=False)
+        self.analysis = None
+        if validate:
+            from repro.analysis import AnalysisError, validate_launch
+            self.analysis = validate_launch(
+                cfg, tree, n_sources=len(self.paths))
+            if not self.analysis.ok:
+                raise AnalysisError(self.analysis)
         self.runtime = ActorRuntime()
         self.store = CheckpointStore(cfg.checkpoint_dir,
                                      cfg.planner_ckpt_every,

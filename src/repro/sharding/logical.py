@@ -126,7 +126,12 @@ class ShardingRules:
                 out.append(None)
             else:
                 used.update(r)
-                out.append(r if len(r) > 1 else r[0])
+                # multi-axis mappings keep tuple form even when only one
+                # mesh axis survives filtering (e.g. embed -> ("pod",
+                # "data") on a pod-less mesh resolves to ("data",)), so a
+                # spec records whether the rule was compound
+                multi = len(self.mapping.get(logical, ())) > 1
+                out.append(r if (len(r) > 1 or multi) else r[0])
         return P(*out)
 
 

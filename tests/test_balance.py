@@ -1,7 +1,11 @@
 """Property-based tests for the balancing core (the paper's scheduler)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the dev extra "
+                         "(pip install -e .[dev])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.balance import (
     balance_items, bin_loads, greedy_binpack, imbalance, karmarkar_karp,

@@ -1,7 +1,11 @@
 """Mixture schedules + two-phase autoscaling."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the dev extra "
+                         "(pip install -e .[dev])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.autoscale import (
     PartitionLimits, SourceProfile, auto_partition,

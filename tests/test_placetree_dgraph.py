@@ -92,3 +92,59 @@ def test_dgraph_derive_shares_nodes():
 def test_dgraph_select_view():
     g = DGraph.from_buffer(_meta(10), select=lambda m: m["modality"] == "text")
     assert all(n.meta["modality"] == "text" for n in g.nodes)
+
+
+# -- orchestration transparency: lineage() / to_dot() ---------------------
+
+def test_lineage_records_decisions_in_order():
+    g = DGraph.from_buffer(_meta(8))
+    g.mark(g.nodes, "selected", "mix")
+    g.with_cost(lambda m: float(m["text_tokens"]))
+    g.assign_buckets([i % 2 for i in range(8)])
+    for b, nodes in g.by_bucket().items():
+        g.assign_bins(nodes, [i % 2 for i in range(len(nodes))])
+    lin = g.lineage("s5")
+    kinds = [k for k, _ in lin]
+    # every decision is reconstructable, in application order
+    assert kinds == ["mix", "cost", "bucket", "bin"]
+    by_kind = dict(lin)
+    assert by_kind["cost"] == 15.0          # text_tokens of s5
+    assert by_kind["bucket"] == 5 % 2
+    assert by_kind["mix"] == "buffered"     # mark() records the prior state
+
+
+def test_lineage_unknown_sample_raises():
+    g = DGraph.from_buffer(_meta(3))
+    with pytest.raises(KeyError):
+        g.lineage("nope")
+
+
+def test_lineage_visible_through_derived_view():
+    g = DGraph.from_buffer(_meta(10))
+    img = g.derive("image", lambda m: m["image_tokens"] > 0)
+    img.with_cost(lambda m: float(m["image_tokens"]))
+    sid = img.nodes[0].sample_id
+    # derived views share nodes, so the parent sees the same lineage
+    assert g.lineage(sid) == img.lineage(sid)
+    assert ("cost", 50.0) in g.lineage(sid)
+
+
+def test_to_dot_renders_states_and_membership():
+    g = DGraph.from_buffer(_meta(6), name="step7")
+    g.assign_buckets([0, 0, 1, 1, 2, 2])
+    g.assign_bins(g.nodes, [0, 1, 0, 1, 0, 1])
+    dot = g.to_dot()
+    assert dot.startswith('digraph "step7" {') and dot.endswith("}")
+    assert "binned" in dot                  # current state in the label
+    assert "bucket=2 bin=1" in dot          # membership in the label
+    for n in g.nodes:
+        assert f"n{n.nid} [" in dot
+
+
+def test_to_dot_max_nodes_truncates():
+    g = DGraph.from_buffer(_meta(50))
+    dot = g.to_dot(max_nodes=5)
+    body = [ln for ln in dot.splitlines() if "[label=" in ln]
+    assert len(body) == 5
+    full = g.to_dot(max_nodes=100)
+    assert len([ln for ln in full.splitlines() if "[label=" in ln]) == 50
