@@ -4,6 +4,9 @@ Left: planner failures injected every 15 steps (after 5 warmup) with
 prefetch buffers of 2 vs 4 — adequate prefetch fully hides the recovery.
 Right: 2 loaders killed at step 35 — shadow promotion keeps delivery
 uninterrupted; we report the max data-fetch stall around the event.
+Chaos: a seeded FaultSchedule (crashes, io-errors, corrupt bursts,
+hangs, slowdowns) soaks the full stack; reports stall percentiles,
+recovery latencies, DLQ totals, and the delivery-ledger verdict.
 """
 from __future__ import annotations
 
@@ -93,11 +96,56 @@ def loader_failure_profile(steps: int = 50):
          f"spike_over_median={around / max(base, 1e-9):.1f}x")
 
 
+def chaos_soak_profile(seed: int = 1234, steps: int = 60):
+    from repro.chaos import FaultInjector, FaultSchedule
+
+    paths = materialize_group(
+        [dataclasses.replace(s, n_samples=512)
+         for s in coyo_like_specs(3)], source_root())
+    tree = ClientPlaceTree([("PP", 1), ("DP", 2), ("CP", 1), ("TP", 1)])
+    cfg = get_config("qwen3-8b")
+    ov = Overlord(paths, tree, StaticSchedule({n: 1.0 for n in paths}),
+                  OverlordConfig(
+                      seq_len=256, rows_per_microbatch=2, n_bins=1,
+                      strategy="backbone_balance",
+                      strategy_params=dict(costfn=backbone_cost(cfg),
+                                           broadcast=()),
+                      prefetch=2, shadows=True, ledger=True,
+                      buffer_target=96,
+                      restore_delay_s=RESTORE_DELAY_S)).start()
+    schedule = FaultSchedule.generate(seed, steps)
+    injector = FaultInjector(ov, schedule)
+    stalls = []
+    try:
+        for step in range(steps):
+            injector.on_step(step)
+            t0 = time.perf_counter()
+            for r in range(ov.tree.world):
+                ov.get_batch(step, r, timeout=30)
+            stalls.append(time.perf_counter() - t0)
+            ov.step_done(step)
+            time.sleep(0.002)
+        time.sleep(0.3)
+        ov.step_done(steps - 1)
+        summary = ov.ledger.verify(strict=True)
+        rec = max((r["recovery_s"] for r in ov.recovery_log), default=0.0)
+        dlq_total = ov.dlq.total
+    finally:
+        injector.uninstall()
+        ov.shutdown()
+    emit(f"chaos.soak.seed{seed}", float(np.median(stalls)) * 1e6,
+         f"events={len(schedule)};kinds={len(schedule.kinds())};"
+         f"p99_fetch_s={float(np.percentile(stalls, 99)):.4f};"
+         f"max_recovery_s={rec:.4f};quarantined={dlq_total};"
+         f"ledger_ok={summary['ok']};delivered={summary['delivered']}")
+
+
 def run():
     # prefetch horizon 2 x 20ms < 50ms restore => stalls; 4 x 20ms covers
     planner_failure_profile(prefetch=2)
     planner_failure_profile(prefetch=4)
     loader_failure_profile()
+    chaos_soak_profile()
 
 
 if __name__ == "__main__":

@@ -4,9 +4,11 @@ AST pass over ``Actor`` subclasses.  The actor runtime serializes all
 state access through the mailbox thread — the analyzer flags code that
 breaks that model: actor state mutated from a side thread, locks held
 inside an actor (a smell that state already leaks across threads),
-synchronous ``call()`` a mailbox thread can block on forever, and
+synchronous ``call()`` a mailbox thread can block on forever,
 half-implemented checkpoint/restore pairs that silently corrupt
-recovery.
+recovery, and (ACT506, data-plane modules only) actor ``call()`` sites
+that bypass the RetryPolicy, where one transient fault crashes the
+caller.
 """
 from __future__ import annotations
 
@@ -203,6 +205,60 @@ class _ActorClassLinter:
                     "finite timeout")
 
 
+class _CallRetryLinter(ast.NodeVisitor):
+    """ACT506 — data-plane call() sites must not bypass RetryPolicy.
+
+    Flags ``<handle>.call("method", ...)`` outside any ``try`` and
+    without a ``retry=`` keyword in files under ``core/``.  There, one
+    transient fault (actor restarting, mailbox timeout) propagates
+    straight into the caller — the planner or supervisor — and takes the
+    data plane down with it.  Only the ``except`` path of a ``try``
+    counts as protection; ``orelse``/``finally`` run unguarded.
+    """
+
+    def __init__(self, where: str, rep: Report):
+        self.where = where
+        self.rep = rep
+        self._try_depth = 0
+
+    def visit_Try(self, node: ast.Try):
+        self._try_depth += 1
+        for stmt in node.body:
+            self.visit(stmt)
+        self._try_depth -= 1
+        for part in (node.handlers, node.orelse, node.finalbody):
+            for stmt in part:
+                self.visit(stmt)
+
+    def visit_Call(self, node: ast.Call):
+        self.generic_visit(node)
+        if not (isinstance(node.func, ast.Attribute)
+                and node.func.attr == "call"
+                and node.args
+                and isinstance(node.args[0], ast.Constant)
+                and isinstance(node.args[0].value, str)):
+            return
+        if self._try_depth > 0 \
+                or any(kw.arg == "retry" for kw in node.keywords):
+            return
+        method = node.args[0].value
+        self.rep.add(
+            "ACT506", Severity.WARNING,
+            f"bare actor call({method!r}) at line {node.lineno} "
+            "bypasses RetryPolicy and is not inside try",
+            f"{self.where}:{node.lineno}",
+            "pass retry=<RetryPolicy> (or wrap in try) so a transient "
+            "actor fault degrades the step instead of crashing the "
+            "caller")
+
+
+def _is_data_plane_file(filename: str) -> bool:
+    """ACT506 scope: files under a core/ directory, except the actor
+    runtime itself (actors.py implements the retry mechanism)."""
+    parts = filename.replace(os.sep, "/").split("/")
+    return "core" in parts[:-1] and parts[-1] != "actors.py"
+
+
 def lint_actor_source(source: str, filename: str = "<string>",
                       report: Optional[Report] = None) -> Report:
     rep = make_report(report)
@@ -216,6 +272,8 @@ def lint_actor_source(source: str, filename: str = "<string>",
     for node in ast.walk(tree):
         if isinstance(node, ast.ClassDef) and _is_actor_class(node):
             _ActorClassLinter(node, filename, rep).run()
+    if _is_data_plane_file(filename):
+        _CallRetryLinter(filename, rep).visit(tree)
     return rep
 
 

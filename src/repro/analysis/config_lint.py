@@ -16,6 +16,7 @@ from repro.analysis.findings import Report, Severity, make_report
 from repro.configs.base import ModelConfig
 from repro.core.orchestrator import OverlordConfig
 from repro.core.placetree import ClientPlaceTree
+from repro.core.resilience import validate_positive_policy
 from repro.core.strategies import STRATEGIES
 
 # mean tokens/sample the orchestrator uses when auto-sizing a step
@@ -82,6 +83,35 @@ def lint_overlord_config(cfg: OverlordConfig,
                 "differential checkpointing", where,
                 "loaders carry the heavy buffers; checkpoint them less "
                 "often than the planner and cover the gap with replay")
+
+    # CFG309 — resilience knobs (retry / breaker / DLQ)
+    if not validate_positive_policy(cfg.retry):
+        rep.add("CFG309", Severity.ERROR,
+                f"retry policy is degenerate (max_attempts="
+                f"{cfg.retry.max_attempts}, base_delay_s="
+                f"{cfg.retry.base_delay_s}, max_delay_s="
+                f"{cfg.retry.max_delay_s}, multiplier="
+                f"{cfg.retry.multiplier}, jitter={cfg.retry.jitter})",
+                where,
+                "a policy needs >= 1 attempt, non-negative delays with "
+                "base <= max, multiplier >= 1 and jitter in [0, 1]")
+    if cfg.breaker_failures < 1:
+        rep.add("CFG309", Severity.ERROR,
+                f"breaker_failures={cfg.breaker_failures} must be >= 1",
+                where,
+                "the circuit breaker opens after this many consecutive "
+                "read failures; < 1 would open on a healthy source")
+    if cfg.breaker_cooldown_s < 0:
+        rep.add("CFG309", Severity.ERROR,
+                f"breaker_cooldown_s={cfg.breaker_cooldown_s} must be "
+                ">= 0", where,
+                "the cooldown gates the half-open probe")
+    if cfg.dlq_capacity < 1:
+        rep.add("CFG309", Severity.ERROR,
+                f"dlq_capacity={cfg.dlq_capacity} must be >= 1", where,
+                "corrupted samples are quarantined here instead of "
+                "killing the loader; the queue needs room for at least "
+                "one entry")
 
     # tree-dependent rules
     if tree is not None:

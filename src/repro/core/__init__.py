@@ -12,4 +12,8 @@ from repro.core.mixing import (  # noqa: F401
 from repro.core.orchestrator import Overlord, OverlordConfig  # noqa: F401
 from repro.core.placetree import ClientPlaceTree  # noqa: F401
 from repro.core.primitives import LoadingPlan, Orchestration  # noqa: F401
+from repro.core.resilience import (  # noqa: F401
+    CircuitBreaker, CorruptSampleError, DeadLetterQueue, RetryPolicy,
+    TransientIOError,
+)
 from repro.core.strategies import STRATEGIES  # noqa: F401

@@ -13,8 +13,10 @@ import queue
 import threading
 import time
 import traceback
-from concurrent.futures import Future
+from concurrent.futures import Future, InvalidStateError
 from typing import Any, Callable, Optional
+
+from repro.core.resilience import RetryPolicy
 
 
 class ActorDied(RuntimeError):
@@ -60,6 +62,8 @@ class ActorHandle:
         self._mailbox: queue.Queue = queue.Queue()
         self._alive = threading.Event()
         self._killed = threading.Event()
+        self._hung = False
+        self._current_mail: Optional[_Mail] = None
         self._thread = threading.Thread(
             target=self._loop, name=f"actor:{name}", daemon=True)
 
@@ -85,16 +89,25 @@ class ActorHandle:
             if self._killed.is_set():
                 self._fail_mail(mail)
                 break
+            self._current_mail = mail
             try:
                 fn = getattr(self._actor, mail.method)
                 result = fn(*mail.args, **mail.kwargs)
                 if mail.future is not None:
-                    mail.future.set_result(result)
+                    try:
+                        mail.future.set_result(result)
+                    except InvalidStateError:
+                        pass   # kill() failed this future while in flight
             except Exception as e:  # actor method raised
                 if mail.future is not None:
-                    mail.future.set_exception(e)
+                    try:
+                        mail.future.set_exception(e)
+                    except InvalidStateError:
+                        pass
                 else:
                     traceback.print_exc()
+            finally:
+                self._current_mail = None
         try:
             if not self._killed.is_set():
                 self._actor.on_stop()
@@ -105,8 +118,11 @@ class ActorHandle:
     def _fail_mail(self, mail):
         if mail is not None and mail.future is not None \
                 and not mail.future.done():
-            mail.future.set_exception(ActorDied(
-                f"actor {self.name} died with mail pending"))
+            try:
+                mail.future.set_exception(ActorDied(
+                    f"actor {self.name} died with mail pending"))
+            except InvalidStateError:
+                pass
 
     def _drain_mailbox(self):
         """A dead actor must not leave callers blocked on futures."""
@@ -118,21 +134,54 @@ class ActorHandle:
 
     @property
     def alive(self) -> bool:
-        return self._alive.is_set()
+        # killed counts as dead immediately: the actor thread may take a
+        # while to notice (it could be wedged mid-method), and callers
+        # probing alive must not enqueue into a mailbox nobody will drain
+        return self._alive.is_set() and not self._killed.is_set()
+
+    @property
+    def hung(self) -> bool:
+        """True when stop() timed out joining the actor thread."""
+        return self._hung
 
     def kill(self):
-        """Simulated crash: no cleanup, pending mail dropped."""
+        """Simulated crash: no cleanup, pending mail dropped.  In-flight
+        and queued calls fail immediately with ActorDied instead of
+        blocking until their timeout."""
         self._killed.set()
+        self._fail_mail(self._current_mail)
+        self._drain_mailbox()
 
-    def stop(self):
-        """Graceful stop: drain then on_stop()."""
+    def stop(self, timeout: float = 5.0):
+        """Graceful stop: drain then on_stop().  A join timeout means the
+        actor thread is wedged: mark the handle dead (and hung) so the
+        runtime's failure callbacks fire instead of silently leaking a
+        zombie."""
         self._mailbox.put(None)
-        self._thread.join(timeout=5)
-        self._alive.clear()
+        self._thread.join(timeout=timeout)
+        if self._thread.is_alive():
+            self._hung = True
+            self._killed.set()
+            self._alive.clear()
+            self._fail_mail(self._current_mail)
+            self._drain_mailbox()
+        else:
+            self._alive.clear()
 
     # -- messaging -------------------------------------------------------
     def call(self, method: str, *args, timeout: Optional[float] = 30.0,
-             **kwargs):
+             retry: Optional[RetryPolicy] = None, **kwargs):
+        """Synchronous call.  With ``retry`` set, retryable failures
+        (timeouts, transient IO errors raised by the method) are retried
+        with the policy's backoff; ActorDied is NOT retryable here — a
+        dead handle stays dead, use ActorRuntime.call_with_retry to chase
+        supervised respawns by name."""
+        if retry is None:
+            return self._call_once(method, args, kwargs, timeout)
+        return retry.run(self._call_once, method, args, kwargs, timeout)
+
+    def _call_once(self, method: str, args: tuple, kwargs: dict,
+                   timeout: Optional[float]):
         if not self.alive:
             raise ActorDied(f"actor {self.name} is dead")
         fut: Future = Future()
@@ -206,6 +255,26 @@ class ActorRuntime:
 
     def on_failure(self, cb: Callable[[str, ActorHandle], None]):
         self._failure_cbs.append(cb)
+
+    def call_with_retry(self, name: str, method: str, *args,
+                        retry: Optional[RetryPolicy] = None,
+                        timeout: Optional[float] = 30.0, **kwargs):
+        """call() that re-resolves the handle by NAME on every attempt, so
+        it rides through supervised respawns and shadow promotions (where
+        the name is remapped to a fresh handle).  ActorDied and missing
+        names are therefore retryable at this level."""
+        if retry is None:
+            retry = RetryPolicy(retryable=RetryPolicy().retryable
+                                + (ActorDied, KeyError))
+        elif not any(issubclass(ActorDied, r) for r in retry.retryable):
+            retry = RetryPolicy(**{**retry.__dict__,
+                                   "retryable": tuple(retry.retryable)
+                                   + (ActorDied, KeyError)})
+
+        def _attempt():
+            return self.get(name).call(method, *args, timeout=timeout,
+                                       **kwargs)
+        return retry.run(_attempt)
 
     def _monitor_loop(self):
         while not self._stop.is_set():

@@ -25,13 +25,14 @@ from repro.data.transforms import Sample
 class DataConstructor(Actor):
     def __init__(self, bucket: int, tree: ClientPlaceTree, seq_len: int,
                  rows_per_microbatch: int, n_bins: int = 1,
-                 queue_depth: int = 4):
+                 queue_depth: int = 4, ledger=None):
         self.bucket = bucket
         self.tree = tree
         self.seq_len = seq_len
         self.rows = rows_per_microbatch
         self.n_bins = n_bins
         self.queue_depth = queue_depth
+        self.ledger = ledger
         # step -> {"bins": [PackedBatch...], "meta": {...}}
         self._ready: dict[int, dict] = {}
         self._pending: dict[int, dict] = {}   # step -> bin -> [samples]
@@ -40,10 +41,22 @@ class DataConstructor(Actor):
         self._built_steps = 0
 
     # -- deposits from Source Loaders --------------------------------------
-    def expect(self, step: int, per_source_counts: dict, n_bins: int):
+    def expect(self, step: int, per_source_counts: dict,
+               n_bins: int) -> bool:
+        """Open a step for deposits.  Returns False when the step is
+        already assembled here — a replanning planner (post-recovery) must
+        not overwrite a batch a client may have consumed (first plan
+        wins)."""
+        if step in self._ready:
+            return False
         self._expected[step] = dict(per_source_counts)
         self.n_bins = n_bins
         self._pending.setdefault(step, {})
+        if all(v <= 0 for v in self._expected[step].values()):
+            # nothing routed to this bucket: assemble the empty step now
+            # instead of wedging clients that wait on it forever
+            self._assemble(step)
+        return True
 
     def deposit(self, step: int, source: str, samples: list[Sample],
                 bins: list[int]):
@@ -64,8 +77,12 @@ class DataConstructor(Actor):
             samples = pend.get(b, [])
             batch = packing.pack_sequences(samples, self.seq_len, self.rows)
             packed_ids = {i for row in batch.doc_ids for i in row}
-            self._dropped += sum(1 for s in samples
-                                 if s.sample_id not in packed_ids)
+            for s in samples:
+                if s.sample_id not in packed_ids:
+                    self._dropped += 1
+                    if self.ledger is not None:
+                        self.ledger.record_dropped(
+                            step, s.sample_id, "packing_overflow")
             bins.append(batch)
         self._ready[step] = {"bins": bins}
         self._built_steps += 1
@@ -74,6 +91,12 @@ class DataConstructor(Actor):
             oldest = min(self._ready)
             if oldest == step:
                 break
+            if self.ledger is not None:
+                for batch in self._ready[oldest]["bins"]:
+                    for row in batch.doc_ids:
+                        for sid in row:
+                            self.ledger.record_dropped(
+                                oldest, sid, "queue_evicted")
             del self._ready[oldest]
 
     def ready_steps(self) -> list[int]:

@@ -8,9 +8,15 @@
   * ShadowManager — hot-standby shadow loaders kept in sync by periodic
     state mirroring; on failure the supervisor promotes the shadow
     immediately (no storage round-trip), so data delivery never pauses.
+
+Failures on either path are COUNTED and surfaced through ``stats()``
+(save failures per actor, shadow-sync staleness in steps) — a save or
+sync that silently fails is how recovery quietly rots, so the chaos
+harness asserts on these counters.
 """
 from __future__ import annotations
 
+import collections
 import os
 import pickle
 import threading
@@ -33,6 +39,9 @@ class CheckpointStore:
         self.restore_delay_s = restore_delay_s
         self._mem: dict[str, tuple[int, bytes]] = {}
         self._lock = threading.Lock()
+        self._saves: collections.Counter = collections.Counter()
+        self._save_failures: collections.Counter = collections.Counter()
+        self._last_failure: dict[str, str] = {}
         if root:
             os.makedirs(root, exist_ok=True)
 
@@ -47,16 +56,28 @@ class CheckpointStore:
             return False
         try:
             state = handle.call("checkpoint_state", timeout=10)
-        except Exception:
+            blob = pickle.dumps({"step": step, "state": state})
+        except Exception as e:
+            # a missed save widens the replay window; count it so
+            # operators (and the chaos soak) can see recovery debt grow
+            with self._lock:
+                self._save_failures[name] += 1
+                self._last_failure[name] = f"{type(e).__name__}: {e}"
             return False
-        blob = pickle.dumps({"step": step, "state": state})
         with self._lock:
             self._mem[name] = (step, blob)
+            self._saves[name] += 1
         if self.root:
-            tmp = os.path.join(self.root, f".{name}.tmp")
-            with open(tmp, "wb") as f:
-                f.write(blob)
-            os.replace(tmp, os.path.join(self.root, f"{name}.ckpt"))
+            try:
+                tmp = os.path.join(self.root, f".{name}.tmp")
+                with open(tmp, "wb") as f:
+                    f.write(blob)
+                os.replace(tmp, os.path.join(self.root, f"{name}.ckpt"))
+            except OSError as e:
+                with self._lock:
+                    self._save_failures[name] += 1
+                    self._last_failure[name] = f"{type(e).__name__}: {e}"
+                return False
         return True
 
     def load(self, name: str) -> Optional[dict]:
@@ -78,6 +99,16 @@ class CheckpointStore:
                 return self._mem[name][0]
         return -1
 
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "saves": dict(self._saves),
+                "save_failures": dict(self._save_failures),
+                "last_failure": dict(self._last_failure),
+                "checkpointed_steps": {n: s for n, (s, _) in
+                                       self._mem.items()},
+            }
+
 
 class ShadowManager:
     """Maintains one warm shadow per active Source Loader.
@@ -86,7 +117,10 @@ class ShadowManager:
     which mirrors the active loader's checkpoint state into the shadow
     (cheap: in-process actor message).  On failure, ``promote`` swaps the
     shadow in — it already holds the buffer, so the next plan proceeds
-    without touching storage.
+    without touching storage; plans issued AFTER the last successful sync
+    must then be replayed against the promoted shadow (the supervisor
+    does this with the Planner's history window) or the same samples
+    would be delivered twice.
     """
 
     def __init__(self, runtime: ActorRuntime,
@@ -95,6 +129,9 @@ class ShadowManager:
         self.make_loader = make_loader
         self.shadows: dict[str, ActorHandle] = {}
         self.promotions: list[dict] = []
+        self._synced_step: dict[str, int] = {}
+        self._sync_failures: collections.Counter = collections.Counter()
+        self._last_step_seen = -1
 
     def ensure_shadow(self, name: str) -> ActorHandle:
         if name in self.shadows and self.shadows[name].alive:
@@ -103,23 +140,51 @@ class ShadowManager:
         self.shadows[name] = h
         return h
 
-    def sync(self, name: str, active: ActorHandle):
+    def sync(self, name: str, active: ActorHandle,
+             step: Optional[int] = None) -> bool:
+        if step is not None:
+            self._last_step_seen = max(self._last_step_seen, step)
         sh = self.shadows.get(name)
         if sh is None or not sh.alive or not active.alive:
-            return
+            return False
         try:
             state = active.call("checkpoint_state", timeout=10)
             sh.cast("restore_state", state)
         except Exception:
-            pass
+            # shadow goes stale by one sync period; count it — staleness
+            # is exactly the replay debt promote() inherits
+            self._sync_failures[name] += 1
+            return False
+        if step is not None:
+            self._synced_step[name] = step
+        return True
+
+    def synced_step(self, name: str) -> int:
+        """Last step whose state the shadow is known to hold (-1: never)."""
+        return self._synced_step.get(name, -1)
 
     def promote(self, name: str) -> Optional[ActorHandle]:
         sh = self.shadows.pop(name, None)
         if sh is None or not sh.alive:
             return None
         self.runtime.reassign(f"{name}::shadow", name)
-        self.promotions.append({"name": name, "time": time.time()})
+        self.promotions.append({"name": name, "time": time.time(),
+                                "synced_step": self.synced_step(name)})
+        # the NEXT shadow for this name starts unsynced; leaving the old
+        # step here would make a second promotion replay too little
+        self._synced_step.pop(name, None)
         return sh
+
+    def stats(self) -> dict:
+        staleness = {
+            name: (self._last_step_seen - self._synced_step.get(name, -1))
+            for name in self.shadows}
+        return {
+            "sync_failures": dict(self._sync_failures),
+            "synced_steps": dict(self._synced_step),
+            "staleness_steps": staleness,
+            "promotions": len(self.promotions),
+        }
 
 
 def shadow_memory_bytes(mgr: ShadowManager) -> int:

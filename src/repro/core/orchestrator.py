@@ -25,6 +25,9 @@ from repro.core.fault import CheckpointStore, ShadowManager
 from repro.core.mixing import MixSchedule, StaticSchedule
 from repro.core.placetree import ClientPlaceTree
 from repro.core.planner import Planner
+from repro.core.resilience import (
+    CircuitBreaker, DeadLetterQueue, RetryPolicy,
+)
 from repro.core.source_loader import SourceLoader
 from repro.core.strategies import STRATEGIES
 from repro.data.storage import SourceReader
@@ -51,6 +54,12 @@ class OverlordConfig:
     vocab_size: int = 50_000
     seed: int = 0
     fill_factor: float = 0.6          # packing headroom
+    # resilience (docs/FAULT_TOLERANCE.md; validated by CFG309)
+    retry: RetryPolicy = dataclasses.field(default_factory=RetryPolicy)
+    breaker_failures: int = 3         # consecutive read failures -> open
+    breaker_cooldown_s: float = 0.25  # open -> half-open probe delay
+    dlq_capacity: int = 4096          # quarantine depth (oldest evicted)
+    ledger: bool = False              # per-sample delivery accounting
 
 
 class Overlord:
@@ -77,6 +86,11 @@ class Overlord:
                                      cfg.planner_ckpt_every,
                                      cfg.loader_ckpt_every,
                                      cfg.restore_delay_s)
+        self.dlq = DeadLetterQueue(cfg.dlq_capacity)
+        self.ledger = None
+        if cfg.ledger:
+            from repro.chaos.ledger import DeliveryLedger
+            self.ledger = DeliveryLedger()
         self.loaders: dict[str, object] = {}
         self.constructors: dict[int, object] = {}
         self.clients: dict[int, TrainerClient] = {}
@@ -131,7 +145,8 @@ class Overlord:
             h = self.runtime.spawn(
                 f"constructor:{b}",
                 DataConstructor(b, self.tree, cfg.seq_len,
-                                cfg.rows_per_microbatch, cfg.n_bins))
+                                cfg.rows_per_microbatch, cfg.n_bins,
+                                ledger=self.ledger))
             self.constructors[b] = h
 
         # planner
@@ -141,7 +156,8 @@ class Overlord:
         self._planner_args = dict(
             tree=self.tree, schedule=self.schedule, strategy=strategy,
             strategy_params=sparams,
-            samples_per_step=cfg.samples_per_step, seed=cfg.seed)
+            samples_per_step=cfg.samples_per_step, seed=cfg.seed,
+            ledger=self.ledger)
         self.planner = self.runtime.spawn(
             "planner", Planner(loaders=dict(self.loaders),
                                constructors=dict(self.constructors),
@@ -159,7 +175,8 @@ class Overlord:
             self.runtime, self.paths,
             register=self._register_loader,
             unregister=self._unregister_loader)
-        self.planner.call("set_scale_callback", self.scaler.on_trigger)
+        self.planner.call("set_scale_callback", self.scaler.on_trigger,
+                          retry=self.cfg.retry)
 
         # trainer clients
         for rank in range(self.tree.world):
@@ -173,7 +190,12 @@ class Overlord:
                             (lc.shard_index, lc.shard_count), lc.workers,
                             buffer_target=self.cfg.buffer_target,
                             vocab_size=self.cfg.vocab_size,
-                            seed=self.cfg.seed)
+                            seed=self.cfg.seed,
+                            retry=self.cfg.retry,
+                            breaker=CircuitBreaker(
+                                self.cfg.breaker_failures,
+                                self.cfg.breaker_cooldown_s),
+                            dlq=self.dlq)
 
     def _make_shadow(self, name: str) -> SourceLoader:
         return self._make_loader(self._loader_cfgs[name])
@@ -186,14 +208,16 @@ class Overlord:
             idx, cnt = parts[2].split("of")
             self._loader_cfgs[name] = LoaderConfig(
                 parts[1], int(idx), int(cnt), 2)
-        self.planner.call("set_loaders", dict(self.loaders))
+        self.planner.call("set_loaders", dict(self.loaders),
+                          retry=self.cfg.retry)
         if self.shadow_mgr:
             self.shadow_mgr.ensure_shadow(name)
 
     def _unregister_loader(self, name: str):
         with self._lock:
             self.loaders.pop(name, None)
-        self.planner.call("set_loaders", dict(self.loaders))
+        self.planner.call("set_loaders", dict(self.loaders),
+                          retry=self.cfg.retry)
 
     # ------------------------------------------------------- supervision
     def _on_actor_failure(self, name: str, handle):
@@ -213,8 +237,28 @@ class Overlord:
                                constructors=dict(self.constructors),
                                **self._planner_args))
         if ckpt:
-            self.planner.call("restore_state", ckpt["state"])
-        self.planner.call("set_scale_callback", self.scaler.on_trigger)
+            self.planner.call("restore_state", ckpt["state"],
+                              retry=self.cfg.retry)
+        self.planner.call("set_scale_callback", self.scaler.on_trigger,
+                          retry=self.cfg.retry)
+
+    def _replay_since(self, handle, name: str, since_step: int):
+        """Replay the plan history window > since_step against a restored
+        loader so already-planned samples are consumed, not re-served."""
+        try:
+            hist = self.planner.call("history_window", timeout=10,
+                                     retry=self.cfg.retry)
+        except Exception:
+            return   # planner down too; its own recovery replans the gap
+        replay = [ids.get(name, []) for s, ids in sorted(hist.items())
+                  if s > since_step]
+        replay = [r for r in replay if r]
+        if replay:
+            try:
+                handle.call("replay", replay, timeout=30,
+                            retry=self.cfg.retry)
+            except Exception:
+                pass   # degraded: at worst the ledger flags duplicates
 
     def _recover_loader(self, name: str):
         promoted = None
@@ -223,49 +267,70 @@ class Overlord:
         if promoted is not None:
             with self._lock:
                 self.loaders[name] = promoted
+            # the shadow mirrors state as of its last successful sync;
+            # plans issued after that already delivered samples the
+            # shadow still buffers — replay them forward or they would
+            # be delivered twice
+            self._replay_since(promoted, name,
+                               self.shadow_mgr.synced_step(name))
         else:
             # cold path: restore from checkpoint + replay plan history
             h = self.runtime.spawn(name, self._make_loader(
                 self._loader_cfgs[name]))
             ckpt = self.store.load(name)
             if ckpt:
-                h.call("restore_state", ckpt["state"])
-                hist = self.planner.call("history_window")
-                replay = [ids.get(name, []) for s, ids in sorted(
-                    hist.items()) if s > ckpt["step"]]
-                h.call("replay", [r for r in replay if r])
+                try:
+                    h.call("restore_state", ckpt["state"],
+                           retry=self.cfg.retry)
+                except Exception:
+                    pass   # fresh loader state; replay still converges
+                self._replay_since(h, name, ckpt["step"])
             with self._lock:
                 self.loaders[name] = h
-        self.planner.call("set_loaders", dict(self.loaders))
+        try:
+            self.planner.call("set_loaders", dict(self.loaders),
+                              retry=self.cfg.retry)
+        except Exception:
+            pass   # planner recovery re-syncs the loader map itself
         if self.shadow_mgr:
             self.shadow_mgr.ensure_shadow(name)
 
     # ---------------------------------------------------------- data path
+    def _bucket_of(self, rank: int, axis: str) -> int:
+        view = self.tree.client_view(rank, axis)
+        return min(view.dp_index, max(self.constructors)) \
+            if self.constructors else 0
+
     def _fetch_view(self, step: int, rank: int) -> Optional[dict]:
         try:
             self.planner.call("ensure_planned", step, timeout=120)
         except Exception:
             return None  # planner down: prefetch buffer rides through
         axis = self.cfg.strategy_params.get("axis", "DP")
-        view = self.tree.client_view(rank, axis)
-        bucket = min(view.dp_index, max(self.constructors)) \
-            if self.constructors else 0
+        bucket = self._bucket_of(rank, axis)
         ch = self.constructors.get(bucket)
         if ch is None:
             return None
-        out = ch.call("get_view", step, rank, axis)
-        if out is None:
-            # planner died mid-plan: the step is 'planned' but lost —
-            # replan it once (fresh buffered data; see Planner.replan)
-            try:
+        try:
+            out = ch.call("get_view", step, rank, axis)
+            if out is None:
+                # planner died mid-plan: the step is 'planned' but lost —
+                # replan it once (fresh buffered data; see Planner.replan)
                 if self.planner.call("replan", step):
                     out = ch.call("get_view", step, rank, axis)
-            except Exception:
-                return None
+        except Exception:
+            return None
         return out
 
     def get_batch(self, step: int, rank: int, timeout: float = 60.0) -> dict:
-        return self.clients[rank].get(step, timeout=timeout)
+        view = self.clients[rank].get(step, timeout=timeout)
+        if self.ledger is not None and view.get("role") == "data":
+            ids = {sid for b in view["bins"] for row in b.doc_ids
+                   for sid in row}
+            axis = self.cfg.strategy_params.get("axis", "DP")
+            self.ledger.record_delivered(
+                step, rank, self._bucket_of(rank, axis), ids)
+        return view
 
     def step_done(self, step: int, metrics: Optional[dict] = None):
         """Call once per completed train step: checkpoints + shadow sync."""
@@ -275,7 +340,12 @@ class Overlord:
         for name, h in list(self.loaders.items()):
             self.store.maybe_save("loader", name, step, h)
             if self.shadow_mgr:
-                self.shadow_mgr.sync(name, h)
+                self.shadow_mgr.sync(name, h, step=step)
+        if self.ledger is not None:
+            # mirror quarantines so verify() accounts them (idempotent)
+            for it in self.dlq.items():
+                self.ledger.record_quarantined(it["sample_id"],
+                                               it["source"], it["reason"])
 
     # ------------------------------------------------------ introspection
     def memory_report(self) -> dict:
@@ -294,7 +364,27 @@ class Overlord:
         return out
 
     def diagnostics(self) -> list[dict]:
-        return self.planner.call("diagnostics")
+        return self.planner.call("diagnostics", retry=self.cfg.retry)
+
+    def resilience_report(self) -> dict:
+        """One view over every hardening surface: checkpoint-save failures,
+        shadow staleness, quarantined samples, per-source breaker state."""
+        health = {}
+        for name, h in list(self.loaders.items()):
+            if "::shadow" in name or not h.alive:
+                continue
+            try:
+                health[name] = h.call("health", timeout=10)
+            except Exception:
+                health[name] = {"source": "?", "breaker": "unreachable"}
+        return {
+            "checkpoints": self.store.stats(),
+            "shadows": self.shadow_mgr.stats() if self.shadow_mgr else {},
+            "dlq": {"total": self.dlq.total, "held": len(self.dlq),
+                    "by_source": self.dlq.counts_by_source()},
+            "loaders": health,
+            "recoveries": len(self.recovery_log),
+        }
 
     # --------------------------------------------------- fault injection
     def inject_loader_failures(self, n: int = 1):

@@ -19,6 +19,24 @@ from repro.core.actors import Actor, ActorHandle
 from repro.core.mixing import MixSchedule
 from repro.core.placetree import ClientPlaceTree
 from repro.core.primitives import LoadingPlan, Orchestration
+from repro.core.resilience import RetryPolicy
+
+
+class _HealthyRemix(MixSchedule):
+    """Schedule view that zeroes degraded sources, re-mixing their weight
+    across healthy ones (circuit-breaker fallback, §6 hardening)."""
+
+    def __init__(self, base: MixSchedule, degraded: set):
+        self.base = base
+        self.degraded = set(degraded)
+
+    def weights(self, step: int) -> dict[str, float]:
+        w = self.base.weights(step)
+        healthy = {k: v for k, v in w.items() if k not in self.degraded}
+        return healthy if healthy else w
+
+    def observe(self, step: int, metrics: dict) -> None:
+        self.base.observe(step, metrics)
 
 
 class Planner(Actor):
@@ -28,7 +46,9 @@ class Planner(Actor):
                  constructors: dict[int, ActorHandle],
                  samples_per_step: int, seed: int = 0,
                  scale_threshold: float = 1.5,
-                 scale_patience: int = 3):
+                 scale_patience: int = 3,
+                 ledger=None,
+                 call_retry: Optional[RetryPolicy] = None):
         self.tree = tree
         self.schedule = schedule
         self.strategy = strategy
@@ -48,6 +68,10 @@ class Planner(Actor):
         self.scale_patience = scale_patience
         self._scale_events: list[dict] = []
         self._scale_cb: Optional[Callable] = None
+        self.ledger = ledger
+        self.call_retry = call_retry or RetryPolicy(
+            max_attempts=2, base_delay_s=0.01, max_delay_s=0.1, seed=seed)
+        self._degraded_log: list[dict] = []
 
     # -- wiring ------------------------------------------------------------
     def set_loaders(self, loaders: dict[str, ActorHandle]):
@@ -77,26 +101,38 @@ class Planner(Actor):
         self._plan_one(step)
         return True
 
-    def _collect_buffers(self) -> tuple[list[dict], dict[str, str]]:
-        """Merge loader buffers; map sample_id -> owning loader name."""
-        meta, owner = [], {}
+    def _collect_buffers(self) -> tuple[list[dict], dict[str, str], set]:
+        """Merge loader buffers; map sample_id -> owning loader name; and
+        collect the set of DEGRADED sources (open circuit breaker) the
+        mixture should route around."""
+        meta, owner, degraded = [], {}, set()
         for name, h in self.loaders.items():
             if not h.alive:
                 continue
             try:
                 entries = h.call("summary_buffer", timeout=10)
+                health = h.call("health", timeout=10)
             except Exception:
                 continue
+            if health.get("breaker") == "open":
+                degraded.add(health["source"])
             for m in entries:
                 meta.append(m)
                 owner[m["sample_id"]] = name
-        return meta, owner
+        return meta, owner, degraded
 
     def _plan_one(self, step: int):
-        buffer_meta, owner = self._collect_buffers()
+        buffer_meta, owner, degraded = self._collect_buffers()
+        schedule = self.schedule
+        if degraded:
+            # fallback re-mix: weight of broken sources flows to healthy
+            # ones instead of starving the step (docs/FAULT_TOLERANCE.md)
+            schedule = _HealthyRemix(self.schedule, degraded)
+            self._degraded_log.append(
+                {"step": step, "degraded": sorted(degraded)})
         ctx = Orchestration(buffer_meta, self.tree, step, self.seed)
         plan: LoadingPlan = self.strategy(
-            ctx, schedule=self.schedule, total=self.samples_per_step,
+            ctx, schedule=schedule, total=self.samples_per_step,
             **self.strategy_params)
 
         # direct loaders: prepare planned samples (transform on the loader),
@@ -125,13 +161,28 @@ class Planner(Actor):
         for bucket, h in self.constructors.items():
             items = deposits.get(bucket, [])
             counts = collections.Counter(src for src, _, _ in items)
-            h.call("expect", step, dict(counts) or {"_": 0}, plan.bins)
+            try:
+                accepted = h.call("expect", step, dict(counts) or {"_": 0},
+                                  plan.bins, timeout=30,
+                                  retry=self.call_retry)
+            except Exception:
+                continue   # constructor unreachable: skip its share
+            if accepted is False:
+                # the step is already assembled there (we are a replan
+                # after recovery); re-depositing would shadow samples a
+                # client may have consumed — first plan wins
+                continue
             per_src = collections.defaultdict(list)
             for src, s, b in items:
                 per_src[src].append((s, b))
             for src, pairs in per_src.items():
                 h.call("deposit", step, src, [p[0] for p in pairs],
-                       [p[1] for p in pairs])
+                       [p[1] for p in pairs], timeout=30,
+                       retry=self.call_retry)
+            if self.ledger is not None:
+                for src, s, b in items:
+                    self.ledger.record_planned(step, s.sample_id, src,
+                                               bucket)
 
         self._history[step] = {
             "per_loader_ids": {ln: [e.sample_id for e in es]
@@ -191,6 +242,10 @@ class Planner(Actor):
 
     def scale_events(self) -> list[dict]:
         return list(self._scale_events)
+
+    def degraded_log(self) -> list[dict]:
+        """Steps where the mixture routed around broken sources."""
+        return list(self._degraded_log)
 
     def planned_through(self) -> int:
         return self._planned_through

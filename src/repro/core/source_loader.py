@@ -8,25 +8,42 @@ across workers (P/n), which the AutoScaler provisions (§5).
 
 State = (file cursor, rng counter, buffer contents) — checkpointable, and
 replayable from plan history (fault.py's differential checkpointing).
+
+Hardened paths (docs/FAULT_TOLERANCE.md): storage reads go through a
+RetryPolicy and a per-source CircuitBreaker (open after N consecutive
+failures, half-open probe after a cooldown; while open, the loader serves
+from its buffer and the Planner re-mixes across healthy sources), and
+corrupted records are quarantined into a DeadLetterQueue with source
+attribution instead of killing the actor.  ``inject_fault`` is the
+deterministic entry point the chaos harness drives.
 """
 from __future__ import annotations
 
 import sys
 import time
-from typing import Optional
+from typing import Any, Optional
 
 import numpy as np
 
 from repro.core.actors import Actor
+from repro.core.resilience import (
+    CircuitBreaker, CorruptSampleError, DeadLetterQueue, RetryPolicy,
+    TransientIOError,
+)
 from repro.data.storage import SourceReader
-from repro.data.transforms import Sample, record_metadata, transform_record
+from repro.data.transforms import (
+    Sample, record_metadata, transform_record, validate_record,
+)
 
 
 class SourceLoader(Actor):
     def __init__(self, source: str, path: str,
                  shard: tuple[int, int] = (0, 1), workers: int = 1,
                  buffer_target: int = 256, vocab_size: int = 50_000,
-                 work_scale: float = 0.0, seed: int = 0):
+                 work_scale: float = 0.0, seed: int = 0,
+                 retry: Optional[RetryPolicy] = None,
+                 breaker: Optional[CircuitBreaker] = None,
+                 dlq: Optional[DeadLetterQueue] = None):
         self.source = source
         self.path = path
         self.shard = shard
@@ -35,11 +52,24 @@ class SourceLoader(Actor):
         self.vocab_size = vocab_size
         self.work_scale = work_scale
         self.seed = seed
+        self.retry = retry or RetryPolicy(max_attempts=3,
+                                          base_delay_s=0.01,
+                                          max_delay_s=0.2, seed=seed)
+        self.breaker = breaker if breaker is not None else CircuitBreaker()
+        # NOT `dlq or ...`: an empty DeadLetterQueue is falsy (len 0) and
+        # `or` would silently replace the shared queue with a private one
+        self.dlq = dlq if dlq is not None else DeadLetterQueue()
         self._reader: Optional[SourceReader] = None
         self._buffer: list[dict] = []      # raw records awaiting dispatch
         self._virtual_time = 0.0           # accumulated transform cost units
         self._samples_loaded = 0
         self._fail_next = False
+        self._read_failures = 0
+        self._quarantined = 0
+        # chaos state (inject_fault): remaining io-error reads, slow-call
+        # budget, pending hang seconds
+        self._chaos: dict[str, Any] = {"io_error": 0, "slow_calls": 0,
+                                       "slow_delay": 0.0, "corrupt_next": 0}
 
     # -- lifecycle --------------------------------------------------------
     def on_start(self):
@@ -51,13 +81,33 @@ class SourceLoader(Actor):
             self._reader.close()
 
     # -- buffer management --------------------------------------------------
+    def _read(self, need: int) -> list[dict]:
+        if self._chaos["io_error"] > 0:
+            self._chaos["io_error"] -= 1
+            raise TransientIOError(
+                f"injected io error on {self.source}")
+        return self._reader.read(need)
+
     def refill(self, target: Optional[int] = None):
-        """Read from storage until the buffer reaches its target depth."""
+        """Read from storage until the buffer reaches its target depth.
+
+        Reads are retried per RetryPolicy; persistent failure trips the
+        circuit breaker and the loader keeps serving from its buffer."""
         target = target or self.buffer_target
         need = target - len(self._buffer)
-        if need > 0:
-            self._buffer.extend(self._reader.read(need))
-            self._samples_loaded += need
+        if need <= 0:
+            return len(self._buffer)
+        if not self.breaker.allow():
+            return len(self._buffer)   # open: degrade, don't block
+        try:
+            records = self.retry.run(self._read, need)
+        except Exception:
+            self._read_failures += 1
+            self.breaker.record_failure()
+            return len(self._buffer)
+        self.breaker.record_success()
+        self._buffer.extend(records)
+        self._samples_loaded += len(records)
         return len(self._buffer)
 
     def summary_buffer(self) -> list[dict]:
@@ -67,7 +117,9 @@ class SourceLoader(Actor):
     # -- plan execution -------------------------------------------------------
     def prepare(self, sample_ids: list[str]) -> list[Sample]:
         """Pop the planned records from the buffer, run sample transforms
-        (amortized across worker-parallel slots), return Samples."""
+        (amortized across worker-parallel slots), return Samples.
+        Corrupted records are quarantined into the DLQ, not raised."""
+        self._chaos_latency()
         if self._fail_next:
             self._fail_next = False
             raise RuntimeError(f"injected failure in loader {self.name}")
@@ -79,6 +131,17 @@ class SourceLoader(Actor):
         out = []
         cost = 0.0
         for r in picked:
+            if self._chaos["corrupt_next"] > 0:
+                self._chaos["corrupt_next"] -= 1
+                r = dict(r)
+                r["_corrupt"] = "chaos"
+            try:
+                validate_record(r)
+            except CorruptSampleError as e:
+                self._quarantined += 1
+                self.dlq.put(str(r.get("sample_id", "?")), self.source,
+                             str(e))
+                continue
             s = transform_record(r, self.source, self.vocab_size,
                                  self.work_scale)
             cost += s.virtual_cost
@@ -92,6 +155,47 @@ class SourceLoader(Actor):
     def inject_failure(self):
         self._fail_next = True
 
+    def inject_fault(self, kind: str, **params) -> dict:
+        """Deterministic fault hooks the chaos harness drives via cast():
+
+          * hang     — sleep ``seconds`` on the mailbox thread NOW
+          * slow     — delay the next ``calls`` prepare() calls by ``delay``
+          * io_error — fail the next ``reads`` storage reads (feeds the
+                       retry policy and circuit breaker)
+          * corrupt  — poison the next ``samples`` records prepare() pops
+                       (caught by validate_record -> DLQ)
+          * crash    — raise on the next prepare() (legacy inject_failure)
+        """
+        if kind == "hang":
+            time.sleep(float(params.get("seconds", 0.2)))
+        elif kind == "slow":
+            self._chaos["slow_calls"] = int(params.get("calls", 3))
+            self._chaos["slow_delay"] = float(params.get("delay", 0.02))
+        elif kind == "io_error":
+            self._chaos["io_error"] += int(params.get("reads", 3))
+        elif kind == "corrupt":
+            self._chaos["corrupt_next"] += int(params.get("samples", 3))
+        elif kind == "crash":
+            self._fail_next = True
+        else:
+            raise ValueError(f"unknown fault kind {kind!r}")
+        return {"kind": kind, "params": dict(params), "source": self.source}
+
+    def _chaos_latency(self):
+        if self._chaos["slow_calls"] > 0:
+            self._chaos["slow_calls"] -= 1
+            time.sleep(self._chaos["slow_delay"])
+
+    def health(self) -> dict:
+        """Degradation signal the Planner re-mixes on (breaker state)."""
+        return {
+            "source": self.source,
+            "breaker": self.breaker.state,
+            "read_failures": self._read_failures,
+            "quarantined": self._quarantined,
+            "buffer_depth": len(self._buffer),
+        }
+
     def stats(self) -> dict:
         return {
             "source": self.source,
@@ -100,6 +204,9 @@ class SourceLoader(Actor):
             "buffer_depth": len(self._buffer),
             "virtual_time": self._virtual_time,
             "samples_loaded": self._samples_loaded,
+            "read_failures": self._read_failures,
+            "quarantined": self._quarantined,
+            "breaker": self.breaker.stats(),
             "cursor": self._reader.tell() if self._reader else 0,
             "access_state_bytes":
                 self._reader.access_state_bytes if self._reader else 0,

@@ -28,6 +28,23 @@ DEFAULT_ROW_GROUP_ROWS = 256
 _OPEN_READERS: dict[int, "SourceReader"] = {}
 _REG_LOCK = threading.Lock()
 
+# storage-layer fault hook (repro.chaos): called at the top of every
+# SourceReader.read with (reader, n); it may raise TransientIOError to
+# model a storage hiccup.  One global slot — installers must restore the
+# previous hook on teardown (FaultInjector does).
+_FAULT_HOOK = None
+
+
+def set_fault_hook(hook):
+    """Install a read-fault hook; returns the previously installed one."""
+    global _FAULT_HOOK
+    prev, _FAULT_HOOK = _FAULT_HOOK, hook
+    return prev
+
+
+def clear_fault_hook():
+    set_fault_hook(None)
+
 
 def open_access_state_bytes() -> int:
     with _REG_LOCK:
@@ -146,6 +163,9 @@ class SourceReader:
 
     def read(self, n: int) -> list[dict]:
         """Read the next n records (wrapping around: epoch semantics)."""
+        hook = _FAULT_HOOK
+        if hook is not None:
+            hook(self, n)   # may raise TransientIOError
         mine = self._my_groups()
         if not mine:
             return []

@@ -11,10 +11,13 @@ container can reason about fleet sizing without wall-clock noise.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Optional
 
 import numpy as np
+
+from repro.core.resilience import CorruptSampleError
 
 
 @dataclasses.dataclass
@@ -30,6 +33,35 @@ class Sample:
     @property
     def total_tokens(self) -> int:
         return int(len(self.tokens)) + int(self.image_tokens)
+
+
+_MAX_TOKENS = 10_000_000
+
+
+def validate_record(record: dict) -> None:
+    """Integrity gate run before transforming a record.
+
+    Raises CorruptSampleError on malformed records (bit-flipped counts,
+    missing fields, chaos-injected ``_corrupt`` markers) so the loader can
+    quarantine the sample in its dead-letter queue instead of crashing.
+    """
+    if record.get("_corrupt"):
+        raise CorruptSampleError(
+            f"corruption marker: {record.get('_corrupt')}")
+    sid = record.get("sample_id")
+    if not isinstance(sid, str) or not sid:
+        raise CorruptSampleError(f"bad sample_id {sid!r}")
+    for key in ("text_tokens", "image_tokens"):
+        v = record.get(key)
+        if not isinstance(v, (int, np.integer)) or isinstance(v, bool) \
+                or v < 0 or v > _MAX_TOKENS:
+            raise CorruptSampleError(f"bad {key}={v!r} in {sid}")
+    cost = record.get("transform_cost")
+    if not isinstance(cost, (int, float)) or not math.isfinite(cost) \
+            or cost < 0:
+        raise CorruptSampleError(f"bad transform_cost={cost!r} in {sid}")
+    if "seed" not in record:
+        raise CorruptSampleError(f"missing seed in {sid}")
 
 
 def transform_record(record: dict, source: str, vocab_size: int = 50_000,

@@ -256,6 +256,20 @@ def test_config_inverted_ckpt_frequencies():         # CFG308
     assert "CFG308" in {f.rule for f in rep2.errors}
 
 
+def test_config_resilience_knobs():                  # CFG309
+    from repro.core import RetryPolicy
+    assert lint_overlord_config(good_overlord_cfg()).ok  # true negative
+    rep = lint_overlord_config(good_overlord_cfg(
+        retry=RetryPolicy(max_attempts=0)))
+    assert "CFG309" in {f.rule for f in rep.errors}
+    rep2 = lint_overlord_config(good_overlord_cfg(
+        retry=RetryPolicy(base_delay_s=2.0, max_delay_s=0.1)))
+    assert "CFG309" in {f.rule for f in rep2.errors}
+    rep3 = lint_overlord_config(good_overlord_cfg(
+        breaker_failures=0, breaker_cooldown_s=-1.0, dlq_capacity=0))
+    assert len([f for f in rep3.errors if f.rule == "CFG309"]) == 3
+
+
 def test_all_shipped_model_configs_clean():          # true negative
     rep = lint_shipped_model_configs()
     assert rep.ok, rep.as_text()
@@ -400,6 +414,67 @@ def test_actor_half_checkpoint_pair():               # ACT505
     """)
     rep = lint_actor_source(src, "half.py")
     assert "ACT505" in {f.rule for f in rep.errors}
+
+
+BARE_CALL = textwrap.dedent("""
+    class Supervisor:
+        def recover(self, handle):
+            return handle.call("restore_state", {})
+""")
+
+
+def test_bare_call_in_core_flagged():                # ACT506
+    rep = lint_actor_source(BARE_CALL, "src/repro/core/supervisor.py")
+    assert "ACT506" in {f.rule for f in rep.warnings}
+
+
+def test_bare_call_outside_core_not_flagged():       # ACT506 scope
+    assert lint_actor_source(BARE_CALL, "src/repro/chaos/driver.py").ok
+    # the actor runtime itself is exempt: it implements the mechanism
+    assert lint_actor_source(BARE_CALL, "src/repro/core/actors.py").ok
+
+
+def test_guarded_calls_in_core_not_flagged():        # ACT506 true negative
+    src = textwrap.dedent("""
+        class Supervisor:
+            def recover(self, handle, policy):
+                handle.call("restore_state", {}, retry=policy)
+                try:
+                    handle.call("replay", [])
+                except Exception:
+                    pass
+
+            def dynamic(self, handle, method):
+                return handle.call(method)   # non-literal: out of scope
+    """)
+    assert lint_actor_source(src, "src/repro/core/supervisor.py").ok
+
+
+def test_call_in_try_orelse_still_flagged():         # ACT506 orelse gap
+    src = textwrap.dedent("""
+        class Supervisor:
+            def recover(self, handle):
+                try:
+                    x = 1
+                except Exception:
+                    pass
+                else:
+                    handle.call("replay", [])   # runs unguarded
+    """)
+    rep = lint_actor_source(src, "src/repro/core/supervisor.py")
+    assert "ACT506" in {f.rule for f in rep.warnings}
+
+
+def test_shipped_core_modules_have_no_bare_calls():  # ACT506 repo-wide
+    import os
+    from repro.analysis.actor_lint import lint_actor_file
+    import repro.core as core_pkg
+    core_dir = os.path.dirname(core_pkg.__file__)
+    rep = Report()
+    for fn in sorted(os.listdir(core_dir)):
+        if fn.endswith(".py"):
+            lint_actor_file(os.path.join(core_dir, fn), rep)
+    assert "ACT506" not in rules(rep), rep.as_text()
 
 
 # =====================================================================

@@ -1,0 +1,418 @@
+"""Units for the hardening primitives (repro.core.resilience), the
+fault-path failure accounting (CheckpointStore / ShadowManager stats),
+the DeliveryLedger invariants, and the ActorRuntime supervision edge
+cases (hung stop(), exactly-once death callbacks, death during an
+in-flight call)."""
+import threading
+import time
+
+import pytest
+
+from repro.chaos.ledger import DeliveryLedger, LedgerViolation
+from repro.core.actors import Actor, ActorDied, ActorRuntime
+from repro.core.fault import CheckpointStore, ShadowManager
+from repro.core.resilience import (
+    CircuitBreaker, DeadLetterQueue, RetryPolicy, TransientIOError,
+    validate_positive_policy,
+)
+
+
+# --------------------------------------------------------- RetryPolicy
+class TestRetryPolicy:
+    def test_retries_transient_then_succeeds(self):
+        calls = []
+
+        def flaky():
+            calls.append(1)
+            if len(calls) < 3:
+                raise TransientIOError("blip")
+            return "ok"
+
+        pol = RetryPolicy(max_attempts=3, base_delay_s=0.001,
+                          max_delay_s=0.002)
+        assert pol.run(flaky) == "ok"
+        assert len(calls) == 3
+
+    def test_exhausts_attempts_and_raises(self):
+        calls = []
+
+        def always():
+            calls.append(1)
+            raise TimeoutError("never")
+
+        pol = RetryPolicy(max_attempts=4, base_delay_s=0.001,
+                          max_delay_s=0.002)
+        with pytest.raises(TimeoutError):
+            pol.run(always)
+        assert len(calls) == 4
+
+    def test_non_retryable_raises_immediately(self):
+        calls = []
+
+        def bad():
+            calls.append(1)
+            raise ValueError("logic bug")
+
+        pol = RetryPolicy(max_attempts=5, base_delay_s=0.001)
+        with pytest.raises(ValueError):
+            pol.run(bad)
+        assert len(calls) == 1
+
+    def test_classification(self):
+        pol = RetryPolicy()
+        assert pol.is_retryable(TimeoutError())
+        assert pol.is_retryable(TransientIOError())
+        assert not pol.is_retryable(ValueError())
+        custom = RetryPolicy(retryable=(KeyError,))
+        assert custom.is_retryable(KeyError())
+        assert not custom.is_retryable(TimeoutError())
+
+    def test_deterministic_jitter(self):
+        a = RetryPolicy(seed=42)
+        b = RetryPolicy(seed=42)
+        assert [a.delay(i) for i in range(5)] \
+            == [b.delay(i) for i in range(5)]
+        # delays grow and stay bounded
+        no_jitter = RetryPolicy(jitter=0.0, base_delay_s=0.01,
+                                max_delay_s=0.05, multiplier=2.0)
+        assert no_jitter.delay(0) == pytest.approx(0.01)
+        assert no_jitter.delay(1) == pytest.approx(0.02)
+        assert no_jitter.delay(10) == pytest.approx(0.05)
+
+    def test_on_retry_hook(self):
+        seen = []
+        pol = RetryPolicy(max_attempts=3, base_delay_s=0.001)
+
+        def flaky():
+            if len(seen) < 2:
+                raise TransientIOError("x")
+            return 1
+
+        assert pol.run(flaky, on_retry=lambda a, e: seen.append(a)) == 1
+        assert seen == [0, 1]
+
+    def test_validate_positive_policy(self):
+        assert validate_positive_policy(RetryPolicy())
+        assert not validate_positive_policy(RetryPolicy(max_attempts=0))
+        assert not validate_positive_policy(
+            RetryPolicy(base_delay_s=1.0, max_delay_s=0.1))
+        assert not validate_positive_policy(RetryPolicy(multiplier=0.5))
+        assert not validate_positive_policy(RetryPolicy(jitter=2.0))
+
+
+# ------------------------------------------------------ CircuitBreaker
+class TestCircuitBreaker:
+    def test_opens_after_threshold(self):
+        clk = [0.0]
+        br = CircuitBreaker(failure_threshold=3, cooldown_s=1.0,
+                            clock=lambda: clk[0])
+        assert br.state == "closed"
+        for _ in range(2):
+            br.record_failure()
+        assert br.state == "closed"
+        br.record_failure()
+        assert br.state == "open"
+        assert not br.allow()
+
+    def test_half_open_probe_then_close(self):
+        clk = [0.0]
+        br = CircuitBreaker(failure_threshold=1, cooldown_s=1.0,
+                            clock=lambda: clk[0])
+        br.record_failure()
+        assert not br.allow()
+        clk[0] = 1.5
+        assert br.allow()             # the single half-open probe
+        assert br.state == "half_open"
+        assert not br.allow()         # only one probe in flight
+        br.record_success()
+        assert br.state == "closed"
+        assert br.allow()
+
+    def test_half_open_failure_reopens(self):
+        clk = [0.0]
+        br = CircuitBreaker(failure_threshold=1, cooldown_s=1.0,
+                            clock=lambda: clk[0])
+        br.record_failure()
+        clk[0] = 1.5
+        assert br.allow()
+        br.record_failure()
+        assert br.state == "open"
+        assert not br.allow()
+        assert br.stats()["opens"] == 2
+
+    def test_success_resets_consecutive(self):
+        br = CircuitBreaker(failure_threshold=2)
+        br.record_failure()
+        br.record_success()
+        br.record_failure()
+        assert br.state == "closed"
+
+
+# ----------------------------------------------------- DeadLetterQueue
+class TestDeadLetterQueue:
+    def test_attribution_and_counts(self):
+        dlq = DeadLetterQueue(capacity=10)
+        dlq.put("s1", "web", "bad tokens")
+        dlq.put("s2", "web", "bad id")
+        dlq.put("s3", "code", "bad cost")
+        assert dlq.total == 3
+        assert dlq.counts_by_source() == {"web": 2, "code": 1}
+        assert dlq.sample_ids() == {"s1", "s2", "s3"}
+        assert all(it["reason"] for it in dlq.items())
+
+    def test_bounded_but_counts_full_history(self):
+        dlq = DeadLetterQueue(capacity=2)
+        for i in range(5):
+            dlq.put(f"s{i}", "web", "r")
+        assert len(dlq) == 2
+        assert dlq.total == 5
+        assert dlq.counts_by_source() == {"web": 5}
+
+
+# ------------------------------------------------------ DeliveryLedger
+class TestDeliveryLedger:
+    def test_clean_run_verifies(self):
+        led = DeliveryLedger()
+        led.record_planned(0, "a", "web", 0)
+        led.record_planned(0, "b", "web", 0)
+        led.record_delivered(0, 0, 0, ["a", "b"])
+        led.record_delivered(0, 1, 0, ["a", "b"])
+        s = led.verify()
+        assert s["ok"] and s["delivered"] == 2
+
+    def test_lost_sample_flagged(self):
+        led = DeliveryLedger()
+        led.record_planned(0, "a", "web", 0)
+        led.record_planned(0, "gone", "web", 0)
+        led.record_delivered(0, 0, 0, ["a"])
+        with pytest.raises(LedgerViolation, match="lost"):
+            led.verify()
+        assert [x[0] for x in led.verify(strict=False)["lost"]] == ["gone"]
+
+    def test_duplicate_delivery_flagged(self):
+        led = DeliveryLedger()
+        led.record_planned(0, "a", "web", 0)
+        led.record_delivered(0, 0, 0, ["a"])
+        led.record_delivered(1, 0, 0, ["a"])
+        with pytest.raises(LedgerViolation, match="duplicated"):
+            led.verify()
+
+    def test_drop_and_quarantine_are_accounted(self):
+        led = DeliveryLedger()
+        led.record_planned(0, "a", "web", 0)
+        led.record_planned(0, "b", "web", 0)
+        led.record_delivered(0, 0, 0, ["a"])
+        led.record_dropped(0, "b", "packing_overflow")
+        assert led.verify()["ok"]
+        led2 = DeliveryLedger()
+        led2.record_planned(0, "q", "web", 0)
+        led2.record_quarantined("q", "web", "corrupt")
+        led2.record_delivered(0, 0, 0, [])
+        assert led2.verify()["ok"]
+
+    def test_rank_skew_flagged(self):
+        led = DeliveryLedger()
+        led.record_delivered(0, 0, 0, ["a"])
+        led.record_delivered(0, 1, 0, ["b"])
+        s = led.verify(strict=False)
+        assert not s["ok"] and s["rank_skew"]
+
+    def test_quarantine_leak_flagged(self):
+        led = DeliveryLedger()
+        led.record_quarantined("x", "web")
+        led.record_delivered(0, 0, 0, ["x"])
+        with pytest.raises(LedgerViolation, match="quarantined"):
+            led.verify()
+
+    def test_undelivered_future_steps_not_lost(self):
+        led = DeliveryLedger()
+        led.record_delivered(0, 0, 0, ["a"])
+        led.record_planned(0, "a", "web", 0)
+        led.record_planned(5, "later", "web", 0)   # prefetch-planned
+        assert led.verify()["ok"]                  # horizon = step 0
+
+
+# ------------------------------------ fault-path failure accounting
+class _StatefulActor(Actor):
+    def __init__(self, fail_ckpt=False):
+        self.fail_ckpt = fail_ckpt
+        self.x = 0
+
+    def bump(self):
+        self.x += 1
+        return self.x
+
+    def checkpoint_state(self):
+        if self.fail_ckpt:
+            raise RuntimeError("broken state")
+        return {"x": self.x}
+
+    def restore_state(self, state):
+        self.x = state["x"]
+
+
+def test_checkpoint_store_counts_failures():
+    rt = ActorRuntime(heartbeat_interval=0.01)
+    store = CheckpointStore(planner_every=1)
+    good = rt.spawn("good", _StatefulActor())
+    bad = rt.spawn("bad", _StatefulActor(fail_ckpt=True))
+    try:
+        assert store.maybe_save("planner", "good", 0, good)
+        assert not store.maybe_save("planner", "bad", 0, bad)
+        assert not store.maybe_save("planner", "bad", 1, bad)
+        st = store.stats()
+        assert st["saves"] == {"good": 1}
+        assert st["save_failures"] == {"bad": 2}
+        assert "RuntimeError" in st["last_failure"]["bad"]
+        assert st["checkpointed_steps"] == {"good": 0}
+    finally:
+        rt.shutdown()
+
+
+def test_shadow_manager_tracks_staleness_and_failures():
+    rt = ActorRuntime(heartbeat_interval=0.01)
+    mgr = ShadowManager(rt, lambda name: _StatefulActor())
+    active = rt.spawn("loader:a", _StatefulActor())
+    broken = rt.spawn("loader:b", _StatefulActor(fail_ckpt=True))
+    try:
+        mgr.ensure_shadow("loader:a")
+        mgr.ensure_shadow("loader:b")
+        assert mgr.sync("loader:a", active, step=3)
+        assert not mgr.sync("loader:b", broken, step=3)
+        assert mgr.synced_step("loader:a") == 3
+        assert mgr.synced_step("loader:b") == -1
+        st = mgr.stats()
+        assert st["sync_failures"] == {"loader:b": 1}
+        assert st["staleness_steps"]["loader:a"] == 0
+        assert st["staleness_steps"]["loader:b"] == 4   # never synced
+        # promotion records the synced step and resets it for the next
+        # shadow generation
+        promoted = mgr.promote("loader:a")
+        assert promoted is not None
+        assert mgr.promotions[-1]["synced_step"] == 3
+        assert mgr.synced_step("loader:a") == -1
+    finally:
+        rt.shutdown()
+
+
+# --------------------------------------------- supervision edge cases
+class _SlowActor(Actor):
+    def __init__(self, block_s=10.0):
+        self.block_s = block_s
+
+    def sleepy(self):
+        time.sleep(self.block_s)
+        return "done"
+
+    def quick(self):
+        return "ok"
+
+
+def test_stop_detects_hung_actor_and_reports():
+    rt = ActorRuntime(heartbeat_interval=0.01)
+    deaths = []
+    rt.on_failure(lambda name, h: deaths.append(name))
+    h = rt.spawn("wedged", _SlowActor(block_s=30.0))
+    try:
+        assert h.call("quick") == "ok"
+        fut = h.call_async("sleepy")      # wedge the mailbox thread
+        time.sleep(0.05)
+        h.stop(timeout=0.1)               # join times out
+        assert h.hung
+        assert not h.alive
+        with pytest.raises(ActorDied):
+            fut.result(timeout=1)
+        # the monitor treats the hang as a death: callback fires
+        deadline = time.time() + 2
+        while "wedged" not in deaths and time.time() < deadline:
+            time.sleep(0.01)
+        assert deaths == ["wedged"]
+    finally:
+        rt.shutdown()
+
+
+def test_graceful_stop_is_not_reported_as_death():
+    rt = ActorRuntime(heartbeat_interval=0.01)
+    deaths = []
+    rt.on_failure(lambda name, h: deaths.append(name))
+    h = rt.spawn("calm", _SlowActor())
+    try:
+        assert h.call("quick") == "ok"
+        h.stop(timeout=2.0)
+        assert not h.hung and not h.alive
+        time.sleep(0.1)
+        assert deaths == []
+    finally:
+        rt.shutdown()
+
+
+def test_failure_callback_fires_exactly_once_per_death():
+    rt = ActorRuntime(heartbeat_interval=0.01)
+    deaths = []
+    rt.on_failure(lambda name, h: deaths.append(name))
+    h = rt.spawn("victim", _SlowActor())
+    try:
+        h.kill()
+        time.sleep(0.2)   # several heartbeat periods
+        assert deaths == ["victim"]
+        # respawn under the same name, kill again: exactly one more
+        h2 = rt.spawn("victim", _SlowActor())
+        assert h2.call("quick") == "ok"
+        h2.kill()
+        time.sleep(0.2)
+        assert deaths == ["victim", "victim"]
+    finally:
+        rt.shutdown()
+
+
+def test_reassign_then_kill_reports_under_new_name():
+    """Shadow promotion remaps a live actor to the primary name; its
+    death afterwards must be reported under the NEW name."""
+    rt = ActorRuntime(heartbeat_interval=0.01)
+    deaths = []
+    rt.on_failure(lambda name, h: deaths.append(name))
+    shadow = rt.spawn("loader:x::shadow", _SlowActor())
+    try:
+        promoted = rt.reassign("loader:x::shadow", "loader:x")
+        assert promoted.call("quick") == "ok"
+        promoted.kill()
+        deadline = time.time() + 2
+        while not deaths and time.time() < deadline:
+            time.sleep(0.01)
+        assert deaths == ["loader:x"]
+    finally:
+        rt.shutdown()
+
+
+def test_kill_during_inflight_call_raises_actor_died_promptly():
+    rt = ActorRuntime(heartbeat_interval=0.01)
+    h = rt.spawn("busy", _SlowActor(block_s=30.0))
+    try:
+        fut = h.call_async("sleepy")
+        time.sleep(0.05)
+        t0 = time.time()
+        h.kill()
+        with pytest.raises(ActorDied):
+            fut.result(timeout=5)
+        assert time.time() - t0 < 1.0   # failed fast, not via timeout
+        # queued (not yet in-flight) mail also fails, and new calls
+        # are rejected immediately
+        with pytest.raises(ActorDied):
+            h.call("quick", timeout=5)
+    finally:
+        rt.shutdown()
+
+
+def test_call_with_retry_rides_through_respawn():
+    rt = ActorRuntime(heartbeat_interval=0.01)
+    h = rt.spawn("phoenix", _SlowActor())
+    try:
+        h.kill()
+        respawned = threading.Timer(
+            0.1, lambda: rt.spawn("phoenix", _SlowActor()))
+        respawned.start()
+        pol = RetryPolicy(max_attempts=8, base_delay_s=0.05,
+                          max_delay_s=0.1)
+        assert rt.call_with_retry("phoenix", "quick", retry=pol) == "ok"
+    finally:
+        rt.shutdown()
