@@ -28,6 +28,7 @@ def main() -> None:
         ("fig2/3", imbalance.run),
         ("fig13", orchestration.run),
         ("fig13-real", orchestration.run_real_compute),
+        ("telemetry-overhead", orchestration.run_telemetry_overhead),
         ("fig12", memory_arch.run),
         ("fig14/A", parallelism_redundancy.run),
         ("fig15", source_parallel.run),

@@ -8,6 +8,8 @@ Three analyzers, one finding model:
                         cross-checks (config_lint; rules CFG3xx/MDL4xx)
   * actor analyzer    — concurrency rules over Actor subclasses
                         (actor_lint; rules ACT5xx)
+  * observability     — shared-counter hygiene in core/ files
+                        (telemetry_lint; rules OBS6xx)
 
 ``validate_launch`` is the composition ``Overlord(validate=True)`` runs
 before spawning anything; ``python -m repro.analysis.lint`` is the same
@@ -32,6 +34,10 @@ from repro.analysis.findings import (  # noqa: F401
 )
 from repro.analysis.strategy_lint import (  # noqa: F401
     lint_strategies, lint_strategy,
+)
+from repro.analysis.telemetry_lint import (  # noqa: F401
+    lint_observability_file, lint_observability_paths,
+    lint_observability_source,
 )
 
 

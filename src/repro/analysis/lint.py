@@ -23,6 +23,9 @@ import sys
 from typing import Optional
 
 from repro.analysis.actor_lint import lint_actor_paths, lint_actor_source
+from repro.analysis.telemetry_lint import (
+    lint_observability_paths, lint_observability_source,
+)
 from repro.analysis.config_lint import (
     lint_model_config, lint_overlord_config, lint_shipped_model_configs,
 )
@@ -68,7 +71,9 @@ def _import_path(path: str):
 def lint_python_file(path: str, rep: Report) -> Report:
     """Actor scan + import-based config/strategy validation of one file."""
     with open(path, encoding="utf-8") as f:
-        lint_actor_source(f.read(), path, rep)
+        src = f.read()
+    lint_actor_source(src, path, rep)
+    lint_observability_source(src, path, rep)
     try:
         mod = _import_path(path)
     except BaseException as e:  # fixture may raise anything at import
@@ -99,6 +104,7 @@ def run(paths: list[str], disabled: list[str]) -> Report:
         src = os.path.join(os.path.dirname(os.path.dirname(
             os.path.dirname(os.path.abspath(__file__)))))
         lint_actor_paths([src], rep)
+        lint_observability_paths([src], rep)
         return rep
     for p in paths:
         if os.path.isdir(p):
@@ -114,6 +120,7 @@ def run(paths: list[str], disabled: list[str]) -> Report:
                         lint_python_file(full, rep)
                     else:
                         lint_actor_paths([full], rep)
+                        lint_observability_paths([full], rep)
         elif p.endswith(".py"):
             lint_python_file(p, rep)
         else:

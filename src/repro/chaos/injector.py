@@ -25,6 +25,7 @@ from typing import Optional
 from repro.chaos.schedules import FaultSchedule
 from repro.core.resilience import TransientIOError
 from repro.data import storage
+from repro.telemetry import ensure_telemetry
 
 
 class FaultInjector:
@@ -91,28 +92,36 @@ class FaultInjector:
             else:
                 entry = (step, ev.kind, name, ev.params)
         self.applied.append(entry)
-        try:
-            if ev.kind == "crash_planner":
-                self.ov.inject_planner_failure()
-            elif ev.kind == "crash_loader":
-                self.ov.loaders[entry[2]].kill()
-            elif ev.kind == "io_error":
-                # storage-layer fault: budgeted failures on the source's
-                # backing file, seen by every reader of that path
-                path = self.ov.paths[entry[2]]
-                with self._lock:
-                    self._io_budget[path] = self._io_budget.get(path, 0) \
-                        + int(params.get("reads", 3))
-            elif ev.kind == "corrupt":
-                for n in self.primary_loaders():
-                    if self._source_of(n) == entry[2]:
-                        self.ov.loaders[n].cast("inject_fault", ev.kind,
-                                                **params)
-            else:   # hang / slow run on the one loader
-                self.ov.loaders[entry[2]].cast("inject_fault", ev.kind,
-                                               **params)
-        except Exception as e:   # a failed injection must not stop soak
-            self.errors.append((step, ev.kind, f"{type(e).__name__}: {e}"))
+        tel = ensure_telemetry(getattr(self.ov, "telemetry", None))
+        with tel.span("chaos.inject", step=step,
+                      target=str(entry[2])) as sp:
+            sp.stamp_fault(ev.kind)
+            try:
+                if ev.kind == "crash_planner":
+                    self.ov.inject_planner_failure()
+                elif ev.kind == "crash_loader":
+                    self.ov.loaders[entry[2]].kill()
+                elif ev.kind == "io_error":
+                    # storage-layer fault: budgeted failures on the
+                    # source's backing file, seen by every reader of it
+                    path = self.ov.paths[entry[2]]
+                    with self._lock:
+                        self._io_budget[path] = \
+                            self._io_budget.get(path, 0) \
+                            + int(params.get("reads", 3))
+                elif ev.kind == "corrupt":
+                    for n in self.primary_loaders():
+                        if self._source_of(n) == entry[2]:
+                            self.ov.loaders[n].cast(
+                                "inject_fault", ev.kind, **params)
+                else:   # hang / slow run on the one loader
+                    self.ov.loaders[entry[2]].cast(
+                        "inject_fault", ev.kind, **params)
+            except Exception as e:   # failed injection must not stop soak
+                self.errors.append(
+                    (step, ev.kind, f"{type(e).__name__}: {e}"))
+                sp.set_attr("inject_error", type(e).__name__)
+        tel.inc("chaos_faults_injected_total", 1.0, kind=ev.kind)
         return entry
 
     def _source_of(self, loader_name: str) -> str:

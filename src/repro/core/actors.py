@@ -17,6 +17,7 @@ from concurrent.futures import Future, InvalidStateError
 from typing import Any, Callable, Optional
 
 from repro.core.resilience import RetryPolicy
+from repro.telemetry import Telemetry, ensure_telemetry
 
 
 class ActorDied(RuntimeError):
@@ -59,6 +60,7 @@ class ActorHandle:
         self.name = name
         self._actor = actor
         self._runtime = runtime
+        self._telemetry = runtime.telemetry
         self._mailbox: queue.Queue = queue.Queue()
         self._alive = threading.Event()
         self._killed = threading.Event()
@@ -92,7 +94,11 @@ class ActorHandle:
             self._current_mail = mail
             try:
                 fn = getattr(self._actor, mail.method)
-                result = fn(*mail.args, **mail.kwargs)
+                # span on the mailbox thread: the actor-side timeline in
+                # the Chrome trace (caller side is the actor.call span)
+                with self._telemetry.span("actor.exec", actor=self.name,
+                                          method=mail.method):
+                    result = fn(*mail.args, **mail.kwargs)
                 if mail.future is not None:
                     try:
                         mail.future.set_result(result)
@@ -176,9 +182,31 @@ class ActorHandle:
         with the policy's backoff; ActorDied is NOT retryable here — a
         dead handle stays dead, use ActorRuntime.call_with_retry to chase
         supervised respawns by name."""
-        if retry is None:
-            return self._call_once(method, args, kwargs, timeout)
-        return retry.run(self._call_once, method, args, kwargs, timeout)
+        tel = self._telemetry
+        if not tel.enabled:
+            if retry is None:
+                return self._call_once(method, args, kwargs, timeout)
+            return retry.run(self._call_once, method, args, kwargs, timeout)
+        t0 = time.perf_counter()
+        with tel.span("actor.call", actor=self.name, method=method):
+            tel.inc("actor_calls_total", 1.0, actor=self.name,
+                    method=method)
+            try:
+                if retry is None:
+                    result = self._call_once(method, args, kwargs, timeout)
+                else:
+                    result = retry.run(
+                        self._call_once, method, args, kwargs, timeout,
+                        on_retry=lambda attempt, exc: tel.inc(
+                            "actor_retries_total", 1.0, actor=self.name,
+                            method=method))
+            except Exception:
+                tel.inc("actor_call_failures_total", 1.0, actor=self.name,
+                        method=method)
+                raise
+        tel.observe("actor_call_seconds", time.perf_counter() - t0,
+                    method=method)
+        return result
 
     def _call_once(self, method: str, args: tuple, kwargs: dict,
                    timeout: Optional[float]):
@@ -217,7 +245,9 @@ class ActorHandle:
 class ActorRuntime:
     """Spawns actors, supervises liveness, reports fleet memory."""
 
-    def __init__(self, heartbeat_interval: float = 0.05):
+    def __init__(self, heartbeat_interval: float = 0.05,
+                 telemetry: Optional[Telemetry] = None):
+        self.telemetry = ensure_telemetry(telemetry)
         self._actors: dict[str, ActorHandle] = {}
         self._lock = threading.Lock()
         self._failure_cbs: list[Callable[[str, ActorHandle], None]] = []
@@ -285,6 +315,8 @@ class ActorRuntime:
                 if not h.alive and h._killed.is_set() \
                         and name not in self._reported_dead:
                     self._reported_dead.add(name)
+                    self.telemetry.inc("actor_deaths_total", 1.0,
+                                       actor=name)
                     for cb in self._failure_cbs:
                         try:
                             cb(name, h)

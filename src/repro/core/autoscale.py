@@ -95,11 +95,16 @@ class MixtureScaler:
 
     def __init__(self, runtime: ActorRuntime, paths: dict[str, str],
                  register: Callable, unregister: Callable,
-                 max_shards: int = 8, workers: int = 2):
+                 max_shards: int = 8, workers: int = 2,
+                 loader_factory: Optional[Callable] = None):
         self.runtime = runtime
         self.paths = paths
         self.register = register        # (name, handle) -> join planning
         self.unregister = unregister    # (name) -> leave planning
+        # LoaderConfig -> SourceLoader; lets the Overlord hand resharded
+        # loaders the shared retry/breaker/dlq/telemetry wiring instead
+        # of spawning bare ones
+        self.loader_factory = loader_factory
         self.max_shards = max_shards
         self.workers = workers
         self.shards: dict[str, int] = {}
@@ -126,8 +131,12 @@ class MixtureScaler:
         new_handles = {}
         for i in range(shards):
             cfg = LoaderConfig(source, i, shards, self.workers)
-            h = self.runtime.spawn(cfg.actor_name, SourceLoader(
-                source, self.paths[source], (i, shards), cfg.workers))
+            if self.loader_factory is not None:
+                loader = self.loader_factory(cfg)
+            else:
+                loader = SourceLoader(source, self.paths[source],
+                                      (i, shards), cfg.workers)
+            h = self.runtime.spawn(cfg.actor_name, loader)
             new_handles[cfg.actor_name] = h
         for name, h in new_handles.items():
             self.register(name, h)

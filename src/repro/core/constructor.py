@@ -20,12 +20,14 @@ from repro.core.actors import Actor
 from repro.core.placetree import ClientPlaceTree
 from repro.data import packing
 from repro.data.transforms import Sample
+from repro.telemetry import Telemetry, ensure_telemetry
 
 
 class DataConstructor(Actor):
     def __init__(self, bucket: int, tree: ClientPlaceTree, seq_len: int,
                  rows_per_microbatch: int, n_bins: int = 1,
-                 queue_depth: int = 4, ledger=None):
+                 queue_depth: int = 4, ledger=None,
+                 telemetry: Optional[Telemetry] = None):
         self.bucket = bucket
         self.tree = tree
         self.seq_len = seq_len
@@ -33,6 +35,7 @@ class DataConstructor(Actor):
         self.n_bins = n_bins
         self.queue_depth = queue_depth
         self.ledger = ledger
+        self.telemetry = ensure_telemetry(telemetry)
         # step -> {"bins": [PackedBatch...], "meta": {...}}
         self._ready: dict[int, dict] = {}
         self._pending: dict[int, dict] = {}   # step -> bin -> [samples]
@@ -60,6 +63,8 @@ class DataConstructor(Actor):
 
     def deposit(self, step: int, source: str, samples: list[Sample],
                 bins: list[int]):
+        self.telemetry.inc("constructor_deposits_total", len(samples),
+                           bucket=self.bucket, source=source)
         pend = self._pending.setdefault(step, {})
         for s, b in zip(samples, bins):
             pend.setdefault(b, []).append(s)
@@ -70,34 +75,51 @@ class DataConstructor(Actor):
                 self._assemble(step)
 
     def _assemble(self, step: int):
-        pend = self._pending.pop(step, {})
-        self._expected.pop(step, None)
-        bins = []
-        for b in range(self.n_bins):
-            samples = pend.get(b, [])
-            batch = packing.pack_sequences(samples, self.seq_len, self.rows)
-            packed_ids = {i for row in batch.doc_ids for i in row}
-            for s in samples:
-                if s.sample_id not in packed_ids:
-                    self._dropped += 1
-                    if self.ledger is not None:
-                        self.ledger.record_dropped(
-                            step, s.sample_id, "packing_overflow")
-            bins.append(batch)
-        self._ready[step] = {"bins": bins}
-        self._built_steps += 1
-        # bound memory: drop oldest ready steps beyond queue depth
-        while len(self._ready) > self.queue_depth:
-            oldest = min(self._ready)
-            if oldest == step:
-                break
-            if self.ledger is not None:
-                for batch in self._ready[oldest]["bins"]:
-                    for row in batch.doc_ids:
-                        for sid in row:
+        tel = self.telemetry
+        with tel.span("constructor.assemble", bucket=self.bucket,
+                      step=step):
+            pend = self._pending.pop(step, {})
+            self._expected.pop(step, None)
+            bins = []
+            for b in range(self.n_bins):
+                samples = pend.get(b, [])
+                batch = packing.pack_sequences(samples, self.seq_len,
+                                               self.rows)
+                packed_ids = {i for row in batch.doc_ids for i in row}
+                for s in samples:
+                    if s.sample_id not in packed_ids:
+                        self._dropped += 1
+                        tel.inc("constructor_dropped_total", 1.0,
+                                bucket=self.bucket,
+                                reason="packing_overflow")
+                        if self.ledger is not None:
                             self.ledger.record_dropped(
-                                oldest, sid, "queue_evicted")
-            del self._ready[oldest]
+                                step, s.sample_id, "packing_overflow")
+                if tel.enabled:
+                    tel.observe("constructor_bin_tokens",
+                                int((batch.segment_ids > 0).sum()),
+                                bucket=self.bucket)
+                bins.append(batch)
+            self._ready[step] = {"bins": bins}
+            self._built_steps += 1
+            # bound memory: drop oldest ready steps beyond queue depth
+            while len(self._ready) > self.queue_depth:
+                oldest = min(self._ready)
+                if oldest == step:
+                    break
+                if self.ledger is not None:
+                    for batch in self._ready[oldest]["bins"]:
+                        for row in batch.doc_ids:
+                            for sid in row:
+                                self.ledger.record_dropped(
+                                    oldest, sid, "queue_evicted")
+                                tel.inc("constructor_dropped_total", 1.0,
+                                        bucket=self.bucket,
+                                        reason="queue_evicted")
+                del self._ready[oldest]
+        if tel.enabled:
+            tel.set_gauge("constructor_ready_depth",
+                          float(len(self._ready)), bucket=self.bucket)
 
     def ready_steps(self) -> list[int]:
         return sorted(self._ready)

@@ -31,6 +31,9 @@ from repro.core.resilience import (
 from repro.core.source_loader import SourceLoader
 from repro.core.strategies import STRATEGIES
 from repro.data.storage import SourceReader
+from repro.telemetry import (
+    Telemetry, chrome_trace, render_prometheus, write_chrome_trace,
+)
 
 
 @dataclasses.dataclass
@@ -60,6 +63,9 @@ class OverlordConfig:
     breaker_cooldown_s: float = 0.25  # open -> half-open probe delay
     dlq_capacity: int = 4096          # quarantine depth (oldest evicted)
     ledger: bool = False              # per-sample delivery accounting
+    # unified telemetry plane (docs/TELEMETRY.md)
+    telemetry: bool = True            # metrics + trace spans
+    telemetry_max_spans: int = 65536  # bounded span retention
 
 
 class Overlord:
@@ -81,7 +87,10 @@ class Overlord:
                 cfg, tree, n_sources=len(self.paths))
             if not self.analysis.ok:
                 raise AnalysisError(self.analysis)
-        self.runtime = ActorRuntime()
+        self.telemetry = Telemetry(enabled=cfg.telemetry,
+                                   max_spans=cfg.telemetry_max_spans,
+                                   seed=cfg.seed)
+        self.runtime = ActorRuntime(telemetry=self.telemetry)
         self.store = CheckpointStore(cfg.checkpoint_dir,
                                      cfg.planner_ckpt_every,
                                      cfg.loader_ckpt_every,
@@ -101,6 +110,7 @@ class Overlord:
         self._loader_cfgs: dict[str, LoaderConfig] = {}
         self._started = False
         self._lock = threading.Lock()
+        self._delivered_ids: set = set()   # unique data-role sample ids
         self.recovery_log: list[dict] = []
 
     # ----------------------------------------------------------- profiles
@@ -146,7 +156,8 @@ class Overlord:
                 f"constructor:{b}",
                 DataConstructor(b, self.tree, cfg.seq_len,
                                 cfg.rows_per_microbatch, cfg.n_bins,
-                                ledger=self.ledger))
+                                ledger=self.ledger,
+                                telemetry=self.telemetry))
             self.constructors[b] = h
 
         # planner
@@ -157,7 +168,7 @@ class Overlord:
             tree=self.tree, schedule=self.schedule, strategy=strategy,
             strategy_params=sparams,
             samples_per_step=cfg.samples_per_step, seed=cfg.seed,
-            ledger=self.ledger)
+            ledger=self.ledger, telemetry=self.telemetry)
         self.planner = self.runtime.spawn(
             "planner", Planner(loaders=dict(self.loaders),
                                constructors=dict(self.constructors),
@@ -174,7 +185,8 @@ class Overlord:
         self.scaler = MixtureScaler(
             self.runtime, self.paths,
             register=self._register_loader,
-            unregister=self._unregister_loader)
+            unregister=self._unregister_loader,
+            loader_factory=self._make_loader)
         self.planner.call("set_scale_callback", self.scaler.on_trigger,
                           retry=self.cfg.retry)
 
@@ -195,7 +207,8 @@ class Overlord:
                             breaker=CircuitBreaker(
                                 self.cfg.breaker_failures,
                                 self.cfg.breaker_cooldown_s),
-                            dlq=self.dlq)
+                            dlq=self.dlq,
+                            telemetry=self.telemetry)
 
     def _make_shadow(self, name: str) -> SourceLoader:
         return self._make_loader(self._loader_cfgs[name])
@@ -323,29 +336,61 @@ class Overlord:
         return out
 
     def get_batch(self, step: int, rank: int, timeout: float = 60.0) -> dict:
-        view = self.clients[rank].get(step, timeout=timeout)
-        if self.ledger is not None and view.get("role") == "data":
-            ids = {sid for b in view["bins"] for row in b.doc_ids
-                   for sid in row}
-            axis = self.cfg.strategy_params.get("axis", "DP")
-            self.ledger.record_delivered(
-                step, rank, self._bucket_of(rank, axis), ids)
+        tel = self.telemetry
+        t0 = time.perf_counter()
+        with tel.span("overlord.get_batch", step=step, rank=rank):
+            view = self.clients[rank].get(step, timeout=timeout)
+            if view.get("role") == "data":
+                ids = {sid for b in view["bins"] for row in b.doc_ids
+                       for sid in row}
+                if self.ledger is not None:
+                    axis = self.cfg.strategy_params.get("axis", "DP")
+                    self.ledger.record_delivered(
+                        step, rank, self._bucket_of(rank, axis), ids)
+                if tel.enabled:
+                    tokens = int(sum((b.segment_ids > 0).sum()
+                                     for b in view["bins"]))
+                    tel.inc("delivered_views_total", 1.0, rank=rank)
+                    tel.inc("rank_tokens_total", tokens, rank=rank)
+                    with self._lock:
+                        new = ids - self._delivered_ids
+                        self._delivered_ids |= new
+                    if new:
+                        tel.inc("delivered_samples_total", len(new))
+        tel.observe("get_batch_seconds", time.perf_counter() - t0,
+                    rank=rank)
         return view
 
     def step_done(self, step: int, metrics: Optional[dict] = None):
-        """Call once per completed train step: checkpoints + shadow sync."""
-        if metrics:
-            self.planner.cast("observe", step, metrics)
-        self.store.maybe_save("planner", "planner", step, self.planner)
-        for name, h in list(self.loaders.items()):
-            self.store.maybe_save("loader", name, step, h)
-            if self.shadow_mgr:
-                self.shadow_mgr.sync(name, h, step=step)
-        if self.ledger is not None:
-            # mirror quarantines so verify() accounts them (idempotent)
-            for it in self.dlq.items():
-                self.ledger.record_quarantined(it["sample_id"],
-                                               it["source"], it["reason"])
+        """Call once per completed train step: checkpoints + shadow sync.
+        ``metrics`` (e.g. loss, grad_norm) feed the adaptive mixture
+        schedule AND land in the registry as ``train_metric`` gauges."""
+        tel = self.telemetry
+        with tel.span("overlord.step_done", step=step):
+            if metrics:
+                try:
+                    self.planner.cast("observe", step, metrics)
+                except Exception:
+                    pass   # planner mid-recovery: metrics still recorded
+                if tel.enabled:
+                    for k, v in metrics.items():
+                        if isinstance(v, (int, float)) \
+                                and not isinstance(v, bool):
+                            tel.set_gauge("train_metric", float(v),
+                                          metric=k)
+            if tel.enabled:
+                tel.inc("train_steps_total")
+                tel.set_gauge("train_step", float(step))
+            self.store.maybe_save("planner", "planner", step, self.planner)
+            for name, h in list(self.loaders.items()):
+                self.store.maybe_save("loader", name, step, h)
+                if self.shadow_mgr:
+                    self.shadow_mgr.sync(name, h, step=step)
+            if self.ledger is not None:
+                # mirror quarantines so verify() accounts them (idempotent)
+                for it in self.dlq.items():
+                    self.ledger.record_quarantined(
+                        it["sample_id"], it["source"], it["reason"])
 
     # ------------------------------------------------------ introspection
     def memory_report(self) -> dict:
@@ -380,11 +425,65 @@ class Overlord:
         return {
             "checkpoints": self.store.stats(),
             "shadows": self.shadow_mgr.stats() if self.shadow_mgr else {},
-            "dlq": {"total": self.dlq.total, "held": len(self.dlq),
-                    "by_source": self.dlq.counts_by_source()},
+            "dlq": self.dlq.stats(),
             "loaders": health,
             "recoveries": len(self.recovery_log),
         }
+
+    # ------------------------------------------------- telemetry surfaces
+    def telemetry_report(self) -> dict:
+        """The unified observability view: metric snapshot + memory +
+        resilience + plan diagnostics + delivery accounting, one call.
+        Supersedes stitching memory_report()/diagnostics()/
+        resilience_report() together by hand (those remain available)."""
+        tel = self.telemetry
+        if tel.enabled:
+            for name, h in self.runtime.actors().items():
+                if h.alive:
+                    tel.set_gauge("actor_mailbox_depth",
+                                  float(h.mailbox_depth), actor=name)
+            dlq = self.dlq.stats()
+            tel.set_gauge("dlq_held", float(dlq["held"]))
+            tel.set_gauge("dlq_total", float(dlq["total"]))
+        per_rank = {
+            dict(key).get("rank", "?"): c.value
+            for (name, key), c in tel.registry.series()["counters"].items()
+            if name == "rank_tokens_total"}
+        vals = list(per_rank.values())
+        imbalance = (max(vals) / (sum(vals) / len(vals))
+                     if vals and sum(vals) > 0 else 1.0)
+        if tel.enabled and vals:
+            tel.set_gauge("rank_token_imbalance", imbalance)
+        try:
+            diag = self.diagnostics()
+        except Exception:
+            diag = []
+        return {
+            "enabled": tel.enabled,
+            "metrics": tel.snapshot(),
+            "memory": self.memory_report(),
+            "resilience": self.resilience_report(),
+            "diagnostics": diag,
+            "delivery": {
+                "delivered_samples": int(tel.registry.counter_value(
+                    "delivered_samples_total")),
+                "per_rank_tokens": per_rank,
+                "token_imbalance": imbalance,
+            },
+            "spans": {"finished": len(tel.tracer),
+                      "dropped": tel.tracer.dropped},
+        }
+
+    def prometheus_dump(self) -> str:
+        """Prometheus text exposition of the full registry."""
+        return render_prometheus(self.telemetry.registry)
+
+    def chrome_trace(self) -> dict:
+        """chrome://tracing / Perfetto JSON of the finished spans."""
+        return chrome_trace(self.telemetry.tracer)
+
+    def write_chrome_trace(self, path) -> None:
+        write_chrome_trace(path, self.telemetry.tracer)
 
     # --------------------------------------------------- fault injection
     def inject_loader_failures(self, n: int = 1):

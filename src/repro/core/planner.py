@@ -20,6 +20,7 @@ from repro.core.mixing import MixSchedule
 from repro.core.placetree import ClientPlaceTree
 from repro.core.primitives import LoadingPlan, Orchestration
 from repro.core.resilience import RetryPolicy
+from repro.telemetry import Telemetry, ensure_telemetry
 
 
 class _HealthyRemix(MixSchedule):
@@ -48,7 +49,8 @@ class Planner(Actor):
                  scale_threshold: float = 1.5,
                  scale_patience: int = 3,
                  ledger=None,
-                 call_retry: Optional[RetryPolicy] = None):
+                 call_retry: Optional[RetryPolicy] = None,
+                 telemetry: Optional[Telemetry] = None):
         self.tree = tree
         self.schedule = schedule
         self.strategy = strategy
@@ -69,6 +71,7 @@ class Planner(Actor):
         self._scale_events: list[dict] = []
         self._scale_cb: Optional[Callable] = None
         self.ledger = ledger
+        self.telemetry = ensure_telemetry(telemetry)
         self.call_retry = call_retry or RetryPolicy(
             max_attempts=2, base_delay_s=0.01, max_delay_s=0.1, seed=seed)
         self._degraded_log: list[dict] = []
@@ -122,19 +125,37 @@ class Planner(Actor):
         return meta, owner, degraded
 
     def _plan_one(self, step: int):
-        buffer_meta, owner, degraded = self._collect_buffers()
-        schedule = self.schedule
-        if degraded:
-            # fallback re-mix: weight of broken sources flows to healthy
-            # ones instead of starving the step (docs/FAULT_TOLERANCE.md)
-            schedule = _HealthyRemix(self.schedule, degraded)
-            self._degraded_log.append(
-                {"step": step, "degraded": sorted(degraded)})
-        ctx = Orchestration(buffer_meta, self.tree, step, self.seed)
-        plan: LoadingPlan = self.strategy(
-            ctx, schedule=schedule, total=self.samples_per_step,
-            **self.strategy_params)
+        tel = self.telemetry
+        t0 = time.perf_counter()
+        with tel.span("planner.plan_step", step=step):
+            with tel.span("planner.collect", step=step) as sp:
+                buffer_meta, owner, degraded = self._collect_buffers()
+                sp.set_attr("buffered", len(buffer_meta))
+            schedule = self.schedule
+            if degraded:
+                # fallback re-mix: weight of broken sources flows to
+                # healthy ones instead of starving the step
+                # (docs/FAULT_TOLERANCE.md)
+                schedule = _HealthyRemix(self.schedule, degraded)
+                self._degraded_log.append(
+                    {"step": step, "degraded": sorted(degraded)})
+                tel.inc("planner_degraded_steps_total")
+            with tel.span("planner.strategy", step=step,
+                          strategy=getattr(self.strategy, "__name__",
+                                           "strategy")):
+                # selection + costing + bucketing/binning all run inside
+                # the strategy over a fresh Orchestration
+                ctx = Orchestration(buffer_meta, self.tree, step, self.seed)
+                plan: LoadingPlan = self.strategy(
+                    ctx, schedule=schedule, total=self.samples_per_step,
+                    **self.strategy_params)
+            plan_dispatched = self._dispatch(step, plan, owner)
+        tel.observe("planner_plan_seconds", time.perf_counter() - t0)
+        self._record_plan_metrics(plan)
+        return plan_dispatched
 
+    def _dispatch(self, step: int, plan: LoadingPlan, owner: dict):
+        tel = self.telemetry
         # direct loaders: prepare planned samples (transform on the loader),
         # THEN announce realized counts + deposit, so a loader failing
         # mid-plan can never wedge a constructor on missing counts.
@@ -143,46 +164,50 @@ class Planner(Actor):
             ln = owner.get(e.sample_id)
             if ln is not None:
                 by_loader[ln].append(e)
-        deposits = collections.defaultdict(list)  # bucket -> [(src, s, bin)]
-        for lname, entries in by_loader.items():
-            h = self.loaders.get(lname)
-            if h is None or not h.alive:
-                continue
-            ids = [e.sample_id for e in entries]
-            try:
-                samples = h.call("prepare", ids, timeout=60)
-            except Exception:
-                continue  # supervision promotes a shadow; step degrades
-            by_id = {s.sample_id: s for s in samples}
-            for e in entries:
-                if e.sample_id in by_id:
-                    deposits[e.bucket].append(
-                        (e.source, by_id[e.sample_id], e.bin))
-        for bucket, h in self.constructors.items():
-            items = deposits.get(bucket, [])
-            counts = collections.Counter(src for src, _, _ in items)
-            try:
-                accepted = h.call("expect", step, dict(counts) or {"_": 0},
-                                  plan.bins, timeout=30,
-                                  retry=self.call_retry)
-            except Exception:
-                continue   # constructor unreachable: skip its share
-            if accepted is False:
-                # the step is already assembled there (we are a replan
-                # after recovery); re-depositing would shadow samples a
-                # client may have consumed — first plan wins
-                continue
-            per_src = collections.defaultdict(list)
-            for src, s, b in items:
-                per_src[src].append((s, b))
-            for src, pairs in per_src.items():
-                h.call("deposit", step, src, [p[0] for p in pairs],
-                       [p[1] for p in pairs], timeout=30,
-                       retry=self.call_retry)
-            if self.ledger is not None:
+        with tel.span("planner.dispatch", step=step):
+            deposits = collections.defaultdict(list)  # bkt -> [(src,s,bin)]
+            for lname, entries in by_loader.items():
+                h = self.loaders.get(lname)
+                if h is None or not h.alive:
+                    continue
+                ids = [e.sample_id for e in entries]
+                try:
+                    samples = h.call("prepare", ids, timeout=60)
+                except Exception:
+                    continue  # supervision promotes a shadow; degrade
+                by_id = {s.sample_id: s for s in samples}
+                for e in entries:
+                    if e.sample_id in by_id:
+                        deposits[e.bucket].append(
+                            (e.source, by_id[e.sample_id], e.bin))
+            for bucket, h in self.constructors.items():
+                items = deposits.get(bucket, [])
+                counts = collections.Counter(src for src, _, _ in items)
+                try:
+                    accepted = h.call("expect", step,
+                                      dict(counts) or {"_": 0},
+                                      plan.bins, timeout=30,
+                                      retry=self.call_retry)
+                except Exception:
+                    continue   # constructor unreachable: skip its share
+                if accepted is False:
+                    # the step is already assembled there (we are a replan
+                    # after recovery); re-depositing would shadow samples
+                    # a client may have consumed — first plan wins
+                    continue
+                per_src = collections.defaultdict(list)
                 for src, s, b in items:
-                    self.ledger.record_planned(step, s.sample_id, src,
-                                               bucket)
+                    per_src[src].append((s, b))
+                for src, pairs in per_src.items():
+                    h.call("deposit", step, src, [p[0] for p in pairs],
+                           [p[1] for p in pairs], timeout=30,
+                           retry=self.call_retry)
+                    tel.inc("planner_samples_planned_total", len(pairs),
+                            source=src)
+                if self.ledger is not None:
+                    for src, s, b in items:
+                        self.ledger.record_planned(step, s.sample_id, src,
+                                                   bucket)
 
         self._history[step] = {
             "per_loader_ids": {ln: [e.sample_id for e in es]
@@ -197,6 +222,22 @@ class Planner(Actor):
         self._planned_through = step
         self._maybe_scale(plan)
         return plan
+
+    def _record_plan_metrics(self, plan: LoadingPlan):
+        """Balance/throughput gauges derived from the emitted plan."""
+        tel = self.telemetry
+        if not tel.enabled:
+            return
+        tel.inc("planner_steps_planned_total")
+        tel.set_gauge("planner_planned_through",
+                      float(self._planned_through))
+        bal = plan.diagnostics.get("balance:main") or {}
+        loads = bal.get("bucket_loads") or []
+        for bucket, load in enumerate(loads):
+            tel.set_gauge("plan_bucket_load", float(load),
+                          bucket=bucket)
+        if "imbalance" in bal:
+            tel.set_gauge("plan_imbalance", float(bal["imbalance"]))
 
     # -- dynamic mixture scaling (§5.2) ---------------------------------------
     def _maybe_scale(self, plan: LoadingPlan):

@@ -95,6 +95,9 @@ class CircuitBreaker:
 
     CLOSED, OPEN, HALF_OPEN = "closed", "open", "half_open"
 
+    #: numeric encoding for the ``breaker_state`` telemetry gauge
+    STATE_VALUES = {"closed": 0.0, "half_open": 0.5, "open": 1.0}
+
     def __init__(self, failure_threshold: int = 3, cooldown_s: float = 0.25,
                  clock: Callable[[], float] = time.monotonic):
         self.failure_threshold = max(int(failure_threshold), 1)
@@ -143,6 +146,10 @@ class CircuitBreaker:
                 self._state = self.OPEN
                 self._opened_at = self._clock()
 
+    def gauge_value(self) -> float:
+        """State as a number a Prometheus gauge can carry."""
+        return self.STATE_VALUES[self.state]
+
     def stats(self) -> dict:
         with self._lock:
             return {"state": self._state,
@@ -186,6 +193,12 @@ class DeadLetterQueue:
     def counts_by_source(self) -> dict[str, int]:
         with self._lock:
             return dict(self._counts)
+
+    def stats(self) -> dict:
+        """The schema ``resilience_report()``/``telemetry_report()`` embed."""
+        with self._lock:
+            return {"total": self._total, "held": len(self._items),
+                    "by_source": dict(self._counts)}
 
     @property
     def total(self) -> int:

@@ -34,6 +34,7 @@ from repro.data.storage import SourceReader
 from repro.data.transforms import (
     Sample, record_metadata, transform_record, validate_record,
 )
+from repro.telemetry import Telemetry, ensure_telemetry
 
 
 class SourceLoader(Actor):
@@ -43,7 +44,8 @@ class SourceLoader(Actor):
                  work_scale: float = 0.0, seed: int = 0,
                  retry: Optional[RetryPolicy] = None,
                  breaker: Optional[CircuitBreaker] = None,
-                 dlq: Optional[DeadLetterQueue] = None):
+                 dlq: Optional[DeadLetterQueue] = None,
+                 telemetry: Optional[Telemetry] = None):
         self.source = source
         self.path = path
         self.shard = shard
@@ -59,6 +61,7 @@ class SourceLoader(Actor):
         # NOT `dlq or ...`: an empty DeadLetterQueue is falsy (len 0) and
         # `or` would silently replace the shared queue with a private one
         self.dlq = dlq if dlq is not None else DeadLetterQueue()
+        self.telemetry = ensure_telemetry(telemetry)
         self._reader: Optional[SourceReader] = None
         self._buffer: list[dict] = []      # raw records awaiting dispatch
         self._virtual_time = 0.0           # accumulated transform cost units
@@ -97,18 +100,44 @@ class SourceLoader(Actor):
         need = target - len(self._buffer)
         if need <= 0:
             return len(self._buffer)
-        if not self.breaker.allow():
-            return len(self._buffer)   # open: degrade, don't block
-        try:
-            records = self.retry.run(self._read, need)
-        except Exception:
-            self._read_failures += 1
-            self.breaker.record_failure()
-            return len(self._buffer)
-        self.breaker.record_success()
-        self._buffer.extend(records)
-        self._samples_loaded += len(records)
+        tel = self.telemetry
+        with tel.span("loader.refill", source=self.source,
+                      need=need) as sp:
+            if not self.breaker.allow():
+                sp.set_attr("skipped", "breaker_open")
+                self._sample_gauges()
+                return len(self._buffer)   # open: degrade, don't block
+            try:
+                records = self.retry.run(
+                    self._read, need, on_retry=self._on_read_retry)
+            except Exception:
+                self._read_failures += 1
+                self.breaker.record_failure()
+                tel.inc("loader_read_failures_total", 1.0,
+                        source=self.source)
+                sp.set_attr("failed", True)
+                self._sample_gauges()
+                return len(self._buffer)
+            self.breaker.record_success()
+            self._buffer.extend(records)
+            self._samples_loaded += len(records)
+            tel.inc("loader_records_read_total", len(records),
+                    source=self.source)
+        self._sample_gauges()
         return len(self._buffer)
+
+    def _on_read_retry(self, attempt: int, exc: BaseException):
+        self.telemetry.inc("loader_read_retries_total", 1.0,
+                           source=self.source)
+
+    def _sample_gauges(self):
+        tel = self.telemetry
+        if not tel.enabled:
+            return
+        tel.set_gauge("loader_buffer_depth", float(len(self._buffer)),
+                      source=self.source, actor=self.name)
+        tel.set_gauge("breaker_state", self.breaker.gauge_value(),
+                      source=self.source)
 
     def summary_buffer(self) -> list[dict]:
         """Metadata the Planner plans over (never payloads)."""
@@ -119,37 +148,48 @@ class SourceLoader(Actor):
         """Pop the planned records from the buffer, run sample transforms
         (amortized across worker-parallel slots), return Samples.
         Corrupted records are quarantined into the DLQ, not raised."""
-        self._chaos_latency()
-        if self._fail_next:
-            self._fail_next = False
-            raise RuntimeError(f"injected failure in loader {self.name}")
-        wanted = set(sample_ids)
-        picked, rest = [], []
-        for r in self._buffer:
-            (picked if r["sample_id"] in wanted else rest).append(r)
-        self._buffer = rest
-        out = []
-        cost = 0.0
-        for r in picked:
-            if self._chaos["corrupt_next"] > 0:
-                self._chaos["corrupt_next"] -= 1
-                r = dict(r)
-                r["_corrupt"] = "chaos"
-            try:
-                validate_record(r)
-            except CorruptSampleError as e:
-                self._quarantined += 1
-                self.dlq.put(str(r.get("sample_id", "?")), self.source,
-                             str(e))
-                continue
-            s = transform_record(r, self.source, self.vocab_size,
-                                 self.work_scale)
-            cost += s.virtual_cost
-            out.append(s)
-        # worker parallelism amortizes transform latency (paper §5.1: P/n)
-        self._virtual_time += cost / self.workers
-        self.refill()
-        return out
+        tel = self.telemetry
+        with tel.span("loader.prepare", source=self.source,
+                      n=len(sample_ids)):
+            self._chaos_latency()
+            if self._fail_next:
+                self._fail_next = False
+                raise RuntimeError(
+                    f"injected failure in loader {self.name}")
+            wanted = set(sample_ids)
+            picked, rest = [], []
+            for r in self._buffer:
+                (picked if r["sample_id"] in wanted else rest).append(r)
+            self._buffer = rest
+            out = []
+            cost = 0.0
+            for r in picked:
+                if self._chaos["corrupt_next"] > 0:
+                    self._chaos["corrupt_next"] -= 1
+                    r = dict(r)
+                    r["_corrupt"] = "chaos"
+                try:
+                    validate_record(r)
+                except CorruptSampleError as e:
+                    self._quarantined += 1
+                    self.dlq.put(str(r.get("sample_id", "?")), self.source,
+                                 str(e))
+                    tel.inc("loader_quarantined_total", 1.0,
+                            source=self.source)
+                    continue
+                s = transform_record(r, self.source, self.vocab_size,
+                                     self.work_scale)
+                cost += s.virtual_cost
+                out.append(s)
+            # worker parallelism amortizes transform latency (§5.1: P/n)
+            self._virtual_time += cost / self.workers
+            if out:
+                tel.inc("loader_samples_prepared_total", len(out),
+                        source=self.source)
+                tel.observe("loader_prepare_cost", cost,
+                            source=self.source)
+            self.refill()
+            return out
 
     # -- fault injection / introspection ---------------------------------------
     def inject_failure(self):

@@ -8,6 +8,12 @@ import numpy as np
 import pytest
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--update-golden", action="store_true", default=False,
+        help="rewrite checked-in golden files instead of comparing")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

@@ -11,8 +11,9 @@ import pytest
 
 from repro.analysis import (
     AnalysisError, Report, Severity, lint_actor_source, lint_dgraph,
-    lint_model_config, lint_overlord_config, lint_shipped_model_configs,
-    lint_strategies, lint_strategy, validate_launch,
+    lint_model_config, lint_observability_source, lint_overlord_config,
+    lint_shipped_model_configs, lint_strategies, lint_strategy,
+    validate_launch,
 )
 from repro.analysis.lint import main as lint_main
 from repro.configs import get_config
@@ -475,6 +476,55 @@ def test_shipped_core_modules_have_no_bare_calls():  # ACT506 repo-wide
         if fn.endswith(".py"):
             lint_actor_file(os.path.join(core_dir, fn), rep)
     assert "ACT506" not in rules(rep), rep.as_text()
+
+
+# =====================================================================
+# observability family (OBS6xx)
+# =====================================================================
+
+FOREIGN_COUNTER = textwrap.dedent("""
+    class Loader:
+        def quarantine(self, sid):
+            self.dlq._total += 1          # another object's books
+            self.dlq._counts[sid] += 1    # subscripted, same problem
+""")
+
+
+def test_foreign_counter_write_flagged():            # OBS601
+    rep = lint_observability_source(
+        FOREIGN_COUNTER, "src/repro/core/source_loader.py")
+    assert len([f for f in rep.warnings if f.rule == "OBS601"]) == 2
+
+
+def test_foreign_counter_outside_core_not_flagged():  # OBS601 scope
+    assert lint_observability_source(
+        FOREIGN_COUNTER, "src/repro/chaos/driver.py").ok
+
+
+def test_own_counters_and_registry_clean():          # OBS601 true negative
+    src = textwrap.dedent("""
+        class Constructor:
+            def drop(self, src):
+                self._dropped += 1            # own books: fine
+                self._over_count[src] += 1    # own, subscripted: fine
+                self.telemetry.inc("constructor_dropped_total", 1.0)
+                depth = self.dlq.stats()["held"]   # read via API: fine
+                return depth
+    """)
+    assert lint_observability_source(
+        src, "src/repro/core/constructor.py").ok
+
+
+def test_shipped_core_modules_obs_clean():           # OBS601 repo-wide
+    import os
+    from repro.analysis import lint_observability_file
+    import repro.core as core_pkg
+    core_dir = os.path.dirname(core_pkg.__file__)
+    rep = Report()
+    for fn in sorted(os.listdir(core_dir)):
+        if fn.endswith(".py"):
+            lint_observability_file(os.path.join(core_dir, fn), rep)
+    assert "OBS601" not in rules(rep), rep.as_text()
 
 
 # =====================================================================

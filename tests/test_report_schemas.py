@@ -1,0 +1,82 @@
+"""Direct unit tests for the Overlord report surfaces' field schemas.
+
+``memory_report()`` / ``resilience_report()`` were previously only
+exercised incidentally; the unified ``telemetry_report()`` embeds both,
+so their shapes are now load-bearing contracts."""
+import pytest
+
+from repro.configs import get_config
+from repro.core import (
+    ClientPlaceTree, Overlord, OverlordConfig, StaticSchedule,
+)
+from repro.data.cost_models import backbone_cost
+from repro.data.sources import coyo_like_specs, materialize_group
+
+N_SOURCES = 2
+
+
+@pytest.fixture(scope="module")
+def overlord(tmp_path_factory):
+    root = tmp_path_factory.mktemp("schema_sources")
+    paths = materialize_group(coyo_like_specs(N_SOURCES), str(root))
+    tree = ClientPlaceTree([("PP", 1), ("DP", 2), ("CP", 1), ("TP", 1)])
+    sched = StaticSchedule({f"coyo_{i:03d}": 1.0
+                            for i in range(N_SOURCES)})
+    cfg = OverlordConfig(
+        seq_len=256, rows_per_microbatch=2, n_bins=1,
+        strategy="backbone_balance", shadows=True, ledger=True,
+        checkpoint_dir=str(tmp_path_factory.mktemp("schema_ckpt")),
+        strategy_params=dict(costfn=backbone_cost(get_config("qwen3-8b")),
+                             broadcast=()))
+    ov = Overlord(paths, tree, sched, cfg).start()
+    for step in range(3):
+        for r in range(ov.tree.world):
+            ov.get_batch(step, r, timeout=30)
+        ov.step_done(step)
+    yield ov
+    ov.shutdown()
+
+
+def test_memory_report_schema(overlord):
+    rep = overlord.memory_report()
+    assert set(rep) == {"loaders", "shadows", "constructors", "planner",
+                        "total_ex_shadows"}
+    for v in rep.values():
+        assert isinstance(v, int) and v >= 0
+    assert rep["total_ex_shadows"] == (rep["loaders"]
+                                       + rep["constructors"]
+                                       + rep["planner"])
+
+
+def test_resilience_report_schema(overlord):
+    rep = overlord.resilience_report()
+    assert set(rep) == {"checkpoints", "shadows", "dlq", "loaders",
+                        "recoveries"}
+    assert set(rep["dlq"]) == {"total", "held", "by_source"}
+    assert set(rep["checkpoints"]) == {"saves", "save_failures",
+                                       "last_failure",
+                                       "checkpointed_steps"}
+    assert set(rep["shadows"]) == {"sync_failures", "synced_steps",
+                                   "staleness_steps", "promotions"}
+    assert rep["loaders"], "at least one live primary loader expected"
+    for health in rep["loaders"].values():
+        assert set(health) == {"source", "breaker", "read_failures",
+                               "quarantined", "buffer_depth"}
+    assert isinstance(rep["recoveries"], int)
+
+
+def test_dlq_stats_matches_legacy_fields(overlord):
+    dlq = overlord.dlq
+    stats = dlq.stats()
+    assert stats["total"] == dlq.total
+    assert stats["held"] == len(dlq)
+    assert stats["by_source"] == dlq.counts_by_source()
+
+
+def test_telemetry_report_embeds_both(overlord):
+    rep = overlord.telemetry_report()
+    assert rep["memory"] == overlord.memory_report()
+    assert set(rep["resilience"]) == set(overlord.resilience_report())
+    assert set(rep["delivery"]) == {"delivered_samples",
+                                    "per_rank_tokens", "token_imbalance"}
+    assert set(rep["spans"]) == {"finished", "dropped"}

@@ -1,0 +1,286 @@
+"""Unified telemetry plane: metric/tracer units, export surfaces, the
+step_done metrics round-trip, and a seeded chaos soak asserting the
+acceptance invariants (delivered counts reconcile with the DeliveryLedger,
+every injected fault appears as a fault-stamped span, exports parse)."""
+import json
+import math
+import os
+import threading
+
+import pytest
+
+from repro.chaos import FaultInjector, FaultSchedule
+from repro.configs import get_config
+from repro.core import (
+    ClientPlaceTree, Overlord, OverlordConfig, StaticSchedule,
+)
+from repro.data.cost_models import backbone_cost
+from repro.data.sources import coyo_like_specs, materialize_group
+from repro.telemetry import (
+    NULL_TELEMETRY, Counter, Histogram, MetricsRegistry, Telemetry,
+    Tracer, canonical_spans, chrome_trace, parse_prometheus,
+    render_prometheus,
+)
+
+CHAOS_SEED = int(os.environ.get("CHAOS_SEED", "1234"))
+
+
+# =====================================================================
+# metric primitives
+# =====================================================================
+
+def test_counter_monotone_and_merge():
+    c = Counter()
+    c.inc()
+    c.inc(4.0)
+    assert c.value == 5.0
+    with pytest.raises(ValueError):
+        c.inc(-1.0)
+    assert Counter(2.0).merge(Counter(3.0)).value == 5.0
+
+
+def test_histogram_quantiles_monotone_and_exact_moments():
+    h = Histogram(capacity=64, seed=1)
+    vals = [float(v) for v in range(200, 0, -1)]
+    for v in vals:
+        h.observe(v)
+    snap = h.snapshot()
+    assert snap["count"] == 200
+    assert snap["sum"] == sum(vals)
+    assert snap["min"] == 1.0 and snap["max"] == 200.0
+    qs = h.quantiles([0.0, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0])
+    assert qs == sorted(qs)          # monotone in q
+    assert math.isnan(Histogram().quantile(0.5))
+
+
+def test_registry_series_identity_and_readers():
+    reg = MetricsRegistry(seed=3)
+    reg.inc("reads", 2.0, source="a")
+    reg.inc("reads", 3.0, source="a")
+    reg.inc("reads", 7.0, source="b")
+    # stringified labels: rank=0 and rank="0" are the same series
+    reg.set_gauge("depth", 4.0, rank=0)
+    assert reg.gauge_value("depth", rank="0") == 4.0
+    assert reg.counter_value("reads", source="a") == 5.0
+    assert reg.counter_total("reads") == 12.0
+    assert reg.counter_value("reads", source="zzz") == 0.0
+    snap = reg.snapshot()
+    assert snap["counters"]['reads{source="a"}'] == 5.0
+
+
+def test_registry_merge_counters_add_gauges_latest_win():
+    a, b = MetricsRegistry(), MetricsRegistry()
+    a.inc("n", 2.0)
+    b.inc("n", 3.0)
+    a.set_gauge("g", 1.0)
+    b.set_gauge("g", 9.0)
+    a.observe("h", 1.0)
+    b.observe("h", 3.0)
+    m = a.merge(b)
+    assert m.counter_value("n") == 5.0
+    assert m.gauge_value("g") == 9.0
+    assert m.histogram("h").count == 2
+
+
+# =====================================================================
+# tracer
+# =====================================================================
+
+def test_spans_nest_per_thread_and_record_errors():
+    tr = Tracer()
+    with tr.span("outer", step=1) as outer:
+        with tr.span("inner", source="s") as inner:
+            assert tr.current() is inner
+        assert tr.current() is outer
+    with pytest.raises(RuntimeError):
+        with tr.span("boom"):
+            raise RuntimeError("x")
+    spans = {s.name: s for s in tr.finished()}
+    assert spans["inner"].parent_id == spans["outer"].span_id
+    assert spans["boom"].attrs["error"] == "RuntimeError"
+    assert tr.find("inner", source="s")
+
+
+def test_span_stacks_are_thread_local():
+    tr = Tracer()
+    seen = {}
+
+    def worker():
+        with tr.span("child.thread"):
+            seen["parent"] = tr.finished(), tr.current().parent_id
+
+    with tr.span("main.outer"):
+        t = threading.Thread(target=worker)
+        t.start()
+        t.join()
+    # the side thread's span must NOT nest under the main thread's stack
+    assert seen["parent"][1] is None
+
+
+def test_tracer_bound_evicts_and_counts():
+    tr = Tracer(max_spans=4)
+    for i in range(10):
+        with tr.span(f"s{i}"):
+            pass
+    assert len(tr) == 4 and tr.dropped == 6
+
+
+# =====================================================================
+# exports
+# =====================================================================
+
+def test_prometheus_round_trip():
+    reg = MetricsRegistry()
+    reg.inc("reads_total", 5.0, source="a")
+    reg.set_gauge("depth", 2.0)
+    for v in (1.0, 2.0, 3.0):
+        reg.observe("lat", v)
+    text = render_prometheus(reg, namespace="repro")
+    parsed = parse_prometheus(text)
+    assert parsed['repro_reads_total{source="a"}'] == 5.0
+    assert parsed["repro_depth"] == 2.0
+    assert parsed["repro_lat_count"] == 3.0
+    assert parsed['repro_lat{quantile="0.5"}'] == 2.0
+
+
+def test_chrome_trace_is_json_and_canonical_tree_nests():
+    tr = Tracer()
+    with tr.span("planner.plan_step", step=0):
+        with tr.span("planner.collect", step=0):
+            pass
+    ct = chrome_trace(tr)
+    json.dumps(ct)   # serializable
+    names = {e.get("name") for e in ct["traceEvents"]}
+    assert {"planner.plan_step", "planner.collect"} <= names
+    forest = canonical_spans(tr.finished())
+    assert forest[0]["name"] == "planner.plan_step"
+    assert forest[0]["children"][0]["name"] == "planner.collect"
+    # no timestamps or ids survive canonicalization
+    assert "start" not in forest[0] and "span_id" not in forest[0]
+
+
+# =====================================================================
+# disabled plane
+# =====================================================================
+
+def test_disabled_telemetry_is_inert():
+    tel = Telemetry(enabled=False)
+    with tel.span("x", a=1) as sp:
+        sp.set_attr("k", "v")
+        sp.stamp_fault("crash")
+    tel.inc("c")
+    tel.set_gauge("g", 1.0)
+    tel.observe("h", 1.0)
+    assert len(tel.tracer) == 0
+    assert tel.registry.counter_total("c") == 0.0
+    assert NULL_TELEMETRY.enabled is False
+
+
+# =====================================================================
+# live data plane
+# =====================================================================
+
+N_SOURCES = 3
+SOAK_STEPS = 30
+
+
+@pytest.fixture(scope="module")
+def source_paths(tmp_path_factory):
+    root = tmp_path_factory.mktemp("telemetry_sources")
+    return materialize_group(coyo_like_specs(N_SOURCES), str(root))
+
+
+def mk(source_paths, **kw):
+    tree = ClientPlaceTree([("PP", 1), ("DP", 2), ("CP", 1), ("TP", 1)])
+    cfg = get_config("qwen3-8b")
+    sched = StaticSchedule({f"coyo_{i:03d}": 1.0
+                            for i in range(N_SOURCES)})
+    defaults = dict(
+        seq_len=256, rows_per_microbatch=2, n_bins=1,
+        strategy="backbone_balance", shadows=True, ledger=True,
+        loader_ckpt_every=4,
+        strategy_params=dict(costfn=backbone_cost(cfg), broadcast=()))
+    defaults.update(kw)
+    return Overlord(source_paths, tree, sched,
+                    OverlordConfig(**defaults)).start()
+
+
+def test_step_done_metrics_round_trip(source_paths):
+    ov = mk(source_paths, shadows=False, ledger=False)
+    try:
+        for step in range(3):
+            for r in range(ov.tree.world):
+                ov.get_batch(step, r, timeout=30)
+            ov.step_done(step, {"loss": 2.5 - step, "grad_norm": 1.25,
+                                "tag": "not-a-number", "flag": True})
+        reg = ov.telemetry.registry
+        assert reg.gauge_value("train_metric", metric="loss") == 0.5
+        assert reg.gauge_value("train_metric", metric="grad_norm") == 1.25
+        # non-numeric values are skipped, not crashed on
+        assert math.isnan(reg.gauge_value("train_metric", metric="tag"))
+        assert math.isnan(reg.gauge_value("train_metric", metric="flag"))
+        assert reg.counter_value("train_steps_total") == 3.0
+        assert reg.gauge_value("train_step") == 2.0
+    finally:
+        ov.shutdown()
+
+
+def test_chaos_soak_telemetry_invariants(source_paths):
+    """Acceptance: a seeded soak where (a) the telemetry delivered-sample
+    count equals the DeliveryLedger's, (b) every injected fault appears
+    as a fault-stamped span, (c) both export formats parse non-empty."""
+    schedule = FaultSchedule.generate(CHAOS_SEED, SOAK_STEPS, rate=0.2)
+    ov = mk(source_paths)
+    injector = FaultInjector(ov, schedule)
+    try:
+        for step in range(SOAK_STEPS):
+            injector.on_step(step)
+            for r in range(ov.tree.world):
+                v = ov.get_batch(step, r, timeout=30)
+                assert v["role"] in ("data", "metadata", "none")
+            ov.step_done(step)
+        rep = ov.telemetry_report()
+
+        # (a) delivered-sample reconciliation with the ledger
+        ledger = ov.ledger.verify(strict=False)
+        assert rep["delivery"]["delivered_samples"] == ledger["delivered"]
+
+        # (b) every timeline entry has a matching fault-stamped span
+        tracer = ov.telemetry.tracer
+        for (step, kind, target, _params) in injector.timeline():
+            stamped = tracer.find("chaos.inject", fault=kind, step=step,
+                                  target=str(target))
+            assert stamped, f"no fault-stamped span for {kind}@{step}"
+
+        # (c) exports parse and are non-empty
+        prom = parse_prometheus(ov.prometheus_dump())
+        assert len(prom) > 10
+        assert prom.get("repro_chaos_faults_injected_total{"
+                        'kind="' + injector.timeline()[0][1] + '"}')
+        ct = ov.chrome_trace()
+        json.dumps(ct)
+        assert len(ct["traceEvents"]) > 10
+
+        # unified report shape
+        assert rep["enabled"] is True
+        assert set(rep) == {"enabled", "metrics", "memory", "resilience",
+                            "diagnostics", "delivery", "spans"}
+        assert rep["delivery"]["per_rank_tokens"]
+        assert rep["delivery"]["token_imbalance"] >= 1.0
+        assert rep["spans"]["finished"] > 0
+    finally:
+        injector.uninstall()
+        ov.shutdown()
+
+
+def test_write_chrome_trace_file(tmp_path, source_paths):
+    ov = mk(source_paths, shadows=False, ledger=False)
+    try:
+        for r in range(ov.tree.world):
+            ov.get_batch(0, r, timeout=30)
+        path = tmp_path / "trace.json"
+        ov.write_chrome_trace(path)
+        data = json.loads(path.read_text())
+        assert data["traceEvents"]
+    finally:
+        ov.shutdown()

@@ -1,0 +1,108 @@
+"""Golden-trace regression: a seeded 20-step planning run produces a
+byte-stable canonical span tree.
+
+The live Overlord is multithreaded (prefetch rings, supervision), so its
+span interleaving is not deterministic.  This test drives the SAME data
+plane — SourceLoader -> Planner -> DataConstructor — synchronously on
+one thread through ``_SyncHandle``, making the canonical
+(timestamp-stripped) span forest fully determined by the seeds.  Any
+change to span names, nesting, or attribution shows up as a diff
+against the checked-in golden; regenerate deliberately with
+
+    pytest tests/test_telemetry_golden.py --update-golden
+"""
+import json
+import os
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.constructor import DataConstructor
+from repro.core.mixing import StaticSchedule
+from repro.core.placetree import ClientPlaceTree
+from repro.core.planner import Planner
+from repro.core.source_loader import SourceLoader
+from repro.core.strategies import STRATEGIES
+from repro.data.cost_models import backbone_cost
+from repro.data.sources import coyo_like_specs, materialize_group
+from repro.telemetry import Telemetry, canonical_spans
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "goldens",
+                      "telemetry_span_tree.json")
+STEPS = 20
+N_SOURCES = 2
+
+
+class _SyncHandle:
+    """Actor-handle stand-in that dispatches on the caller's thread, so
+    the span forest has ONE deterministic interleaving."""
+
+    alive = True
+
+    def __init__(self, actor):
+        self._actor = actor
+
+    def call(self, method, *args, timeout=None, retry=None, **kwargs):
+        return getattr(self._actor, method)(*args, **kwargs)
+
+    def cast(self, method, *args, **kwargs):
+        getattr(self._actor, method)(*args, **kwargs)
+
+
+def run_seeded_plane(tmpdir: str) -> list[dict]:
+    tel = Telemetry(enabled=True, seed=0)
+    paths = materialize_group(coyo_like_specs(N_SOURCES, seed=7), tmpdir)
+    tree = ClientPlaceTree([("PP", 1), ("DP", 2), ("CP", 1), ("TP", 1)])
+    sched = StaticSchedule({s: 1.0 for s in paths})
+
+    loaders = {}
+    for i, (src, path) in enumerate(sorted(paths.items())):
+        loader = SourceLoader(src, path, (0, 1), workers=1,
+                              buffer_target=64, seed=3, telemetry=tel)
+        loader.name = f"loader:{src}:0of1"
+        loader.on_start()
+        loaders[loader.name] = _SyncHandle(loader)
+
+    constructors = {
+        b: _SyncHandle(DataConstructor(b, tree, seq_len=128,
+                                       rows_per_microbatch=2, n_bins=1,
+                                       telemetry=tel))
+        for b in range(tree.buckets("DP"))}
+
+    planner = Planner(
+        tree, sched, STRATEGIES["backbone_balance"],
+        dict(costfn=backbone_cost(get_config("qwen3-8b")), broadcast=(),
+             n_bins=1),
+        loaders=loaders, constructors=constructors,
+        samples_per_step=8, seed=5, telemetry=tel)
+    for step in range(STEPS):
+        planner.ensure_planned(step)
+    for h in loaders.values():
+        h.call("on_stop")
+    return canonical_spans(tel.tracer.finished())
+
+
+def test_golden_span_tree(tmp_path, request):
+    forest = run_seeded_plane(str(tmp_path / "sources"))
+    if request.config.getoption("--update-golden"):
+        os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+        with open(GOLDEN, "w", encoding="utf-8") as f:
+            json.dump(forest, f, indent=1, sort_keys=True)
+            f.write("\n")
+        pytest.skip("golden rewritten; rerun without --update-golden")
+    assert os.path.exists(GOLDEN), \
+        "golden missing; generate with --update-golden"
+    with open(GOLDEN, encoding="utf-8") as f:
+        expected = json.load(f)
+    assert forest == expected, \
+        "canonical span tree diverged from golden (span names, nesting " \
+        "or attribution changed); regenerate with --update-golden if " \
+        "this is intentional"
+
+
+def test_sync_plane_is_deterministic(tmp_path):
+    """Two same-seed runs in one process yield identical forests — the
+    precondition that makes the golden meaningful."""
+    a = run_seeded_plane(str(tmp_path / "a"))
+    b = run_seeded_plane(str(tmp_path / "b"))
+    assert a == b

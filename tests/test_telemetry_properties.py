@@ -1,0 +1,146 @@
+"""Property-based invariants of the telemetry plane.
+
+Four laws the rest of the PR leans on:
+
+  * span trees are well-nested — a randomly shaped program of nested
+    ``with tracer.span(...)`` blocks reconstructs to exactly its own
+    shape via ``canonical_spans``;
+  * histogram quantiles are monotone in q for ANY observation stream;
+  * counter merge is associative (integer increments are exact in
+    float64, so equality is exact, not approximate);
+  * under a random fault schedule, ``telemetry_report()``'s delivered-
+    sample count reconciles with the DeliveryLedger's.
+"""
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the dev extra "
+                         "(pip install -e .[dev])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.chaos import FaultInjector, FaultSchedule  # noqa: E402
+from repro.configs import get_config  # noqa: E402
+from repro.core import (  # noqa: E402
+    ClientPlaceTree, Overlord, OverlordConfig, StaticSchedule,
+)
+from repro.data.cost_models import backbone_cost  # noqa: E402
+from repro.data.sources import (  # noqa: E402
+    coyo_like_specs, materialize_group,
+)
+from repro.telemetry import (  # noqa: E402
+    Counter, Histogram, Tracer, canonical_spans,
+)
+
+
+# =====================================================================
+# well-nested span trees
+# =====================================================================
+
+# a "program" is a forest: each node is a list of child programs
+program = st.recursive(
+    st.lists(st.nothing(), max_size=0),
+    lambda kids: st.lists(kids, max_size=4),
+    max_leaves=20)
+
+
+def _run(tracer, forest, depth=0):
+    for i, kids in enumerate(forest):
+        with tracer.span(f"n{depth}.{i}"):
+            _run(tracer, kids, depth + 1)
+
+
+def _shape(forest, depth=0):
+    return [{"name": f"n{depth}.{i}", "attrs": {},
+             **({"children": _shape(kids, depth + 1)} if kids else {})}
+            for i, kids in enumerate(forest)]
+
+
+@given(program)
+@settings(max_examples=80, deadline=None)
+def test_span_forest_reconstructs_program_shape(forest):
+    tr = Tracer()
+    _run(tr, forest)
+    assert canonical_spans(tr.finished()) == _shape(forest)
+
+
+# =====================================================================
+# histogram quantile monotonicity
+# =====================================================================
+
+@given(st.lists(st.floats(-1e9, 1e9, allow_nan=False), min_size=1,
+                max_size=300),
+       st.lists(st.floats(0.0, 1.0, allow_nan=False), min_size=2,
+                max_size=20),
+       st.integers(1, 64), st.integers(0, 2**32 - 1))
+@settings(max_examples=80, deadline=None)
+def test_histogram_quantiles_monotone(values, qs, capacity, seed):
+    h = Histogram(capacity=capacity, seed=seed)
+    for v in values:
+        h.observe(v)
+    got = h.quantiles(sorted(qs))
+    assert got == sorted(got)
+    assert min(values) <= got[0] and got[-1] <= max(values)
+    assert h.count == len(values)
+
+
+# =====================================================================
+# counter merge associativity
+# =====================================================================
+
+@given(st.lists(st.integers(0, 2**40), min_size=3, max_size=3))
+@settings(max_examples=100, deadline=None)
+def test_counter_merge_associative(vals):
+    a, b, c = (Counter(float(v)) for v in vals)
+    left = a.merge(b).merge(c)
+    right = a.merge(b.merge(c))
+    assert left.value == right.value == float(sum(vals))
+
+
+# =====================================================================
+# ledger reconciliation under random fault schedules
+# =====================================================================
+
+N_SOURCES = 2
+STEPS = 10
+
+
+@pytest.fixture(scope="module")
+def source_paths(tmp_path_factory):
+    root = tmp_path_factory.mktemp("telemetry_prop_sources")
+    return materialize_group(coyo_like_specs(N_SOURCES), str(root))
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=3, deadline=None)
+def test_delivery_reconciles_under_random_faults(source_paths, seed):
+    tree = ClientPlaceTree([("PP", 1), ("DP", 2), ("CP", 1), ("TP", 1)])
+    sched = StaticSchedule({f"coyo_{i:03d}": 1.0
+                            for i in range(N_SOURCES)})
+    cfg = OverlordConfig(
+        seq_len=256, rows_per_microbatch=2, n_bins=1,
+        strategy="backbone_balance", shadows=False, ledger=True,
+        seed=seed % 1000,
+        strategy_params=dict(costfn=backbone_cost(get_config("qwen3-8b")),
+                             broadcast=()))
+    schedule = FaultSchedule.generate(
+        seed, STEPS, rate=0.2, warmup=2,
+        kinds=("io_error", "corrupt", "slow"),
+        ensure=("io_error", "corrupt"))
+    ov = Overlord(source_paths, tree, sched, cfg).start()
+    injector = FaultInjector(ov, schedule)
+    try:
+        for step in range(STEPS):
+            injector.on_step(step)
+            for r in range(ov.tree.world):
+                ov.get_batch(step, r, timeout=30)
+            ov.step_done(step)
+        rep = ov.telemetry_report()
+        ledger = ov.ledger.verify(strict=False)
+        assert rep["delivery"]["delivered_samples"] == ledger["delivered"]
+        for (step, kind, target, _params) in injector.timeline():
+            assert ov.telemetry.tracer.find(
+                "chaos.inject", fault=kind, step=step,
+                target=str(target)), f"unstamped fault {kind}@{step}"
+    finally:
+        injector.uninstall()
+        ov.shutdown()
