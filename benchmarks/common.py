@@ -1,18 +1,23 @@
 """Shared benchmark scaffolding: timed rows in ``name,us_per_call,derived``
-CSV format (one function per paper table/figure)."""
+CSV format (one function per paper table/figure), plus a machine-readable
+JSON dump (``write_json``) CI archives as a build artifact."""
 from __future__ import annotations
 
 import contextlib
+import json
 import os
 import tempfile
 import time
 
-ROWS: list[tuple[str, float, str]] = []
+#: (name, value, derived, units) — value is microseconds unless the row
+#: overrode ``units`` (e.g. the speedup ratios)
+ROWS: list[tuple[str, float, str, str]] = []
 
 
-def emit(name: str, us_per_call: float, derived: str):
-    ROWS.append((name, us_per_call, derived))
-    print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+def emit(name: str, value: float, derived: str = "",
+         units: str = "us_per_call"):
+    ROWS.append((name, value, derived, units))
+    print(f"{name},{value:.2f},{derived}", flush=True)
 
 
 @contextlib.contextmanager
@@ -21,6 +26,17 @@ def timed(name: str, derived_fn=lambda: ""):
     yield
     us = (time.perf_counter() - t0) * 1e6
     emit(name, us, derived_fn())
+
+
+def write_json(path: str) -> None:
+    """Dump every emitted row as ``[{name, value, units, derived}]`` —
+    the schema the CI artifact (BENCH_orchestration.json) carries so
+    perf regressions are diffable across runs."""
+    data = [{"name": n, "value": v, "units": u, "derived": d}
+            for n, v, d, u in ROWS]
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(data, f, indent=1, sort_keys=False)
+        f.write("\n")
 
 
 def source_root() -> str:

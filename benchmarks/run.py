@@ -2,7 +2,8 @@
 """Benchmark driver — one section per paper exhibit (DESIGN.md §6):
 
   Fig. 2/3   imbalance.run              skew + FLOP imbalance
-  Fig. 13    orchestration.run(+real)   vanilla/backbone/hybrid speedups
+  Fig. 13    orchestration.run          vanilla/backbone/hybrid speedups
+  pipeline   orchestration.run_pipeline serial vs pipelined planning
   Fig. 12    memory_arch.run            memory vs colocated (288/576 GPU)
   Fig. 14/A  parallelism_redundancy.run simulated-backend redundancy
   Fig. 15    source_parallel.run        source-partitioning memory
@@ -10,24 +11,42 @@
   App. B     constructor_scaling.run    constructor fan-in at scale
   kernels    kernel_bench.run           segment-skip tile evidence
   roofline   roofline.run               dry-run roofline terms
+
+Usage:
+    python -m benchmarks.run [--only fig13,pipeline] [--json out.json]
+
+``--only`` runs a comma-separated subset of section names; ``--json``
+additionally writes every emitted row as machine-readable JSON
+(name/value/units/derived — the BENCH_orchestration.json CI artifact).
 """
+import argparse
 import sys
 import time
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.run",
+        description="paper-exhibit benchmark driver")
+    ap.add_argument("--only", default="",
+                    help="comma-separated section names to run "
+                         "(default: all)")
+    ap.add_argument("--json", default="",
+                    help="also write emitted rows to this JSON file")
+    args = ap.parse_args(argv)
+
     print("name,us_per_call,derived")
-    sections = []
     from benchmarks import (
-        constructor_scaling, fault_tolerance, imbalance, kernel_bench,
-        memory_arch, orchestration, parallelism_redundancy, roofline,
-        source_parallel,
+        common, constructor_scaling, fault_tolerance, imbalance,
+        kernel_bench, memory_arch, orchestration,
+        parallelism_redundancy, roofline, source_parallel,
     )
     sections = [
         ("fig2/3", imbalance.run),
         ("fig13", orchestration.run),
         ("fig13-real", orchestration.run_real_compute),
+        ("pipeline", orchestration.run_pipeline),
         ("telemetry-overhead", orchestration.run_telemetry_overhead),
         ("fig12", memory_arch.run),
         ("fig14/A", parallelism_redundancy.run),
@@ -37,6 +56,14 @@ def main() -> None:
         ("kernels", kernel_bench.run),
         ("roofline", roofline.run),
     ]
+    if args.only:
+        wanted = {s.strip() for s in args.only.split(",") if s.strip()}
+        unknown = wanted - {name for name, _ in sections}
+        if unknown:
+            print(f"unknown sections: {sorted(unknown)} "
+                  f"(have {[n for n, _ in sections]})", file=sys.stderr)
+            sys.exit(2)
+        sections = [(n, fn) for n, fn in sections if n in wanted]
     failed = []
     for name, fn in sections:
         t0 = time.time()
@@ -47,6 +74,8 @@ def main() -> None:
             traceback.print_exc()
         print(f"section.{name},{(time.time() - t0) * 1e6:.0f},elapsed",
               flush=True)
+    if args.json:
+        common.write_json(args.json)
     if failed:
         print(f"FAILED sections: {failed}", file=sys.stderr)
         sys.exit(1)

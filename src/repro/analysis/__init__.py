@@ -10,6 +10,8 @@ Three analyzers, one finding model:
                         (actor_lint; rules ACT5xx)
   * observability     — shared-counter hygiene in core/ files
                         (telemetry_lint; rules OBS6xx)
+  * performance       — serial per-handle RPC loops in core/ files
+                        (perf_lint; rules PERF7xx)
 
 ``validate_launch`` is the composition ``Overlord(validate=True)`` runs
 before spawning anything; ``python -m repro.analysis.lint`` is the same
@@ -31,6 +33,9 @@ from repro.analysis.dgraph_lint import (  # noqa: F401
 )
 from repro.analysis.findings import (  # noqa: F401
     AnalysisError, Finding, Report, Severity,
+)
+from repro.analysis.perf_lint import (  # noqa: F401
+    lint_perf_file, lint_perf_paths, lint_perf_source,
 )
 from repro.analysis.strategy_lint import (  # noqa: F401
     lint_strategies, lint_strategy,

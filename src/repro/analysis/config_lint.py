@@ -113,6 +113,19 @@ def lint_overlord_config(cfg: OverlordConfig,
                 "killing the loader; the queue needs room for at least "
                 "one entry")
 
+    # CFG310 — pipelined planning knobs
+    if cfg.plan_ahead < 0:
+        rep.add("CFG310", Severity.ERROR,
+                f"plan_ahead={cfg.plan_ahead} must be >= 0", where,
+                "plan_ahead is the background planning lookahead window; "
+                "0 disables pipelining, negative values are meaningless")
+    elif cfg.plan_ahead > 0 and cfg.prefetch == 0:
+        rep.add("CFG310", Severity.WARNING,
+                f"plan_ahead={cfg.plan_ahead} with prefetch=0", where,
+                "the lookahead only hides planner latency when clients "
+                "prefetch; enable client prefetch to benefit from "
+                "pipelined planning")
+
     # tree-dependent rules
     if tree is not None:
         _lint_against_tree(cfg, tree, n_sources, rep, where)

@@ -23,6 +23,7 @@ import sys
 from typing import Optional
 
 from repro.analysis.actor_lint import lint_actor_paths, lint_actor_source
+from repro.analysis.perf_lint import lint_perf_paths, lint_perf_source
 from repro.analysis.telemetry_lint import (
     lint_observability_paths, lint_observability_source,
 )
@@ -74,6 +75,7 @@ def lint_python_file(path: str, rep: Report) -> Report:
         src = f.read()
     lint_actor_source(src, path, rep)
     lint_observability_source(src, path, rep)
+    lint_perf_source(src, path, rep)
     try:
         mod = _import_path(path)
     except BaseException as e:  # fixture may raise anything at import
@@ -105,6 +107,7 @@ def run(paths: list[str], disabled: list[str]) -> Report:
             os.path.dirname(os.path.abspath(__file__)))))
         lint_actor_paths([src], rep)
         lint_observability_paths([src], rep)
+        lint_perf_paths([src], rep)
         return rep
     for p in paths:
         if os.path.isdir(p):
@@ -121,6 +124,7 @@ def run(paths: list[str], disabled: list[str]) -> Report:
                     else:
                         lint_actor_paths([full], rep)
                         lint_observability_paths([full], rep)
+                        lint_perf_paths([full], rep)
         elif p.endswith(".py"):
             lint_python_file(p, rep)
         else:

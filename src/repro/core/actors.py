@@ -219,6 +219,10 @@ class ActorHandle:
     def call_async(self, method: str, *args, **kwargs) -> Future:
         if not self.alive:
             raise ActorDied(f"actor {self.name} is dead")
+        tel = self._telemetry
+        if tel.enabled:
+            tel.inc("actor_async_calls_total", 1.0, actor=self.name,
+                    method=method)
         fut: Future = Future()
         self._mailbox.put(_Mail(method, args, kwargs, fut))
         return fut
@@ -226,6 +230,10 @@ class ActorHandle:
     def cast(self, method: str, *args, **kwargs) -> None:
         if not self.alive:
             raise ActorDied(f"actor {self.name} is dead")
+        tel = self._telemetry
+        if tel.enabled:
+            tel.inc("actor_casts_total", 1.0, actor=self.name,
+                    method=method)
         self._mailbox.put(_Mail(method, args, kwargs, None))
 
     # -- introspection ----------------------------------------------------
@@ -240,6 +248,87 @@ class ActorHandle:
     @property
     def mailbox_depth(self) -> int:
         return self._mailbox.qsize()
+
+
+class _FanCall:
+    __slots__ = ("handle", "method", "args", "kwargs", "timeout", "retry",
+                 "attempt", "future")
+
+    def __init__(self, handle, method, args, kwargs, timeout, retry):
+        self.handle = handle
+        self.method = method
+        self.args = args
+        self.kwargs = kwargs
+        self.timeout = timeout
+        self.retry = retry
+        self.attempt = 0
+        self.future: Optional[Future] = None
+
+
+class FanOut:
+    """One overlapped wave of ``call_async`` RPCs across many handles.
+
+    ``submit()`` enqueues the call on every target's mailbox immediately
+    (no round-trip); ``gather()`` then collects the futures, so the wave
+    costs one max-latency instead of a sum of round-trips.  Per-call
+    RetryPolicy semantics match ``ActorHandle.call``: a retryable failure
+    (timeout, transient IO error raised by the method) re-submits THAT
+    call with the policy's backoff; ``ActorDied`` stays terminal — a dead
+    handle does not resurrect under the same object, so chasing respawns
+    is ``ActorRuntime.call_with_retry``'s job.  Calls that still fail
+    after retries land in ``failures`` keyed like their results would
+    have been; ``gather()`` never raises.
+    """
+
+    def __init__(self, telemetry: Optional["Telemetry"] = None):
+        self.telemetry = ensure_telemetry(telemetry)
+        self._calls: "dict[Any, _FanCall]" = {}
+        self.failures: "dict[Any, BaseException]" = {}
+
+    def submit(self, key, handle: "ActorHandle", method: str, *args,
+               timeout: Optional[float] = 30.0,
+               retry: Optional[RetryPolicy] = None, **kwargs) -> None:
+        call = _FanCall(handle, method, args, kwargs, timeout, retry)
+        self._start(key, call)
+        self._calls[key] = call
+
+    def _start(self, key, call: _FanCall) -> None:
+        call.attempt += 1
+        try:
+            call.future = call.handle.call_async(
+                call.method, *call.args, **call.kwargs)
+        except Exception as e:       # dead handle: fail at submit time
+            call.future = None
+            self.failures[key] = e
+
+    def gather(self) -> dict:
+        """Collect the wave.  Returns ``{key: result}`` for successes;
+        failed calls (after per-call retries) are in ``failures``."""
+        tel = self.telemetry
+        results = {}
+        with tel.span("actor.fanout", calls=len(self._calls)):
+            for key, call in self._calls.items():
+                while call.future is not None:
+                    try:
+                        results[key] = call.future.result(
+                            timeout=call.timeout)
+                        break
+                    except Exception as e:
+                        retry = call.retry
+                        retryable = (retry is not None
+                                     and retry.is_retryable(e)
+                                     and call.attempt < retry.max_attempts)
+                        if not retryable:
+                            self.failures[key] = e
+                            tel.inc("fanout_call_failures_total", 1.0,
+                                    method=call.method)
+                            break
+                        tel.inc("actor_retries_total", 1.0,
+                                actor=call.handle.name, method=call.method)
+                        time.sleep(retry.delay(call.attempt - 1))
+                        self._start(key, call)
+        self._calls.clear()
+        return results
 
 
 class ActorRuntime:

@@ -61,6 +61,21 @@ class DataConstructor(Actor):
             self._assemble(step)
         return True
 
+    def ingest(self, step: int, per_source: dict, n_bins: int) -> bool:
+        """Batched ``expect`` + ``deposit`` in one RPC: ``per_source``
+        maps source -> (samples, bins).  The planner's dispatch stage
+        used to pay 1 + n_sources mailbox round-trips per constructor
+        per step; this collapses them into one.  Returns False when the
+        step is already assembled here (replan after recovery — first
+        plan wins, exactly like ``expect``)."""
+        counts = {src: len(samples)
+                  for src, (samples, _bins) in per_source.items()}
+        if not self.expect(step, counts or {"_": 0}, n_bins):
+            return False
+        for src, (samples, bins) in per_source.items():
+            self.deposit(step, src, samples, bins)
+        return True
+
     def deposit(self, step: int, source: str, samples: list[Sample],
                 bins: list[int]):
         self.telemetry.inc("constructor_deposits_total", len(samples),

@@ -45,6 +45,14 @@ class OverlordConfig:
     strategy: str = "backbone_balance"
     strategy_params: dict = dataclasses.field(default_factory=dict)
     prefetch: int = 2
+    # pipelined planning (docs/PERFORMANCE.md; validated by CFG310):
+    # plan_ahead=N keeps N steps planned beyond the newest fetch so
+    # get_batch never waits on the planner in steady state; 0 restores
+    # the fully demand-driven serial path.  fanout_rpc=False falls back
+    # to one-RPC-at-a-time planning (the measured baseline in
+    # benchmarks/orchestration.run_pipeline).
+    plan_ahead: int = 2
+    fanout_rpc: bool = True
     buffer_target: int = 256         # loader read-buffer depth (records)
     auto_partition: bool = True
     limits: PartitionLimits = dataclasses.field(
@@ -110,6 +118,7 @@ class Overlord:
         self._loader_cfgs: dict[str, LoaderConfig] = {}
         self._started = False
         self._lock = threading.Lock()
+        self._nudged_to = -1      # highest plan-ahead target cast so far
         self._delivered_ids: set = set()   # unique data-role sample ids
         self.recovery_log: list[dict] = []
 
@@ -149,13 +158,18 @@ class Overlord:
             self.loaders[lc.actor_name] = h
             self._loader_cfgs[lc.actor_name] = lc
 
-        # constructors: one per bucket at the distribute axis
+        # constructors: one per bucket at the distribute axis.  The ready
+        # queue must hold every step between the slowest consumer and the
+        # plan-ahead frontier, or prefetched-but-unconsumed steps get
+        # evicted (and replanned — duplicating delivery)
         axis = cfg.strategy_params.get("axis", "DP")
+        queue_depth = max(4, cfg.plan_ahead + cfg.prefetch + 4)
         for b in range(self.tree.buckets(axis)):
             h = self.runtime.spawn(
                 f"constructor:{b}",
                 DataConstructor(b, self.tree, cfg.seq_len,
                                 cfg.rows_per_microbatch, cfg.n_bins,
+                                queue_depth=queue_depth,
                                 ledger=self.ledger,
                                 telemetry=self.telemetry))
             self.constructors[b] = h
@@ -168,7 +182,8 @@ class Overlord:
             tree=self.tree, schedule=self.schedule, strategy=strategy,
             strategy_params=sparams,
             samples_per_step=cfg.samples_per_step, seed=cfg.seed,
-            ledger=self.ledger, telemetry=self.telemetry)
+            ledger=self.ledger, telemetry=self.telemetry,
+            plan_ahead=cfg.plan_ahead, fanout=cfg.fanout_rpc)
         self.planner = self.runtime.spawn(
             "planner", Planner(loaders=dict(self.loaders),
                                constructors=dict(self.constructors),
@@ -221,16 +236,25 @@ class Overlord:
             idx, cnt = parts[2].split("of")
             self._loader_cfgs[name] = LoaderConfig(
                 parts[1], int(idx), int(cnt), 2)
-        self.planner.call("set_loaders", dict(self.loaders),
-                          retry=self.cfg.retry)
+        # cast, not call: register/unregister run inside the scale
+        # callback, which the planner fires ON its own mailbox thread —
+        # a synchronous call back into the planner would self-deadlock
+        # (the ACT503 pattern).  Mailbox FIFO still orders the update
+        # before any later plan.
+        try:
+            self.planner.cast("set_loaders", dict(self.loaders))
+        except Exception:
+            pass   # planner mid-recovery re-syncs the loader map itself
         if self.shadow_mgr:
             self.shadow_mgr.ensure_shadow(name)
 
     def _unregister_loader(self, name: str):
         with self._lock:
             self.loaders.pop(name, None)
-        self.planner.call("set_loaders", dict(self.loaders),
-                          retry=self.cfg.retry)
+        try:
+            self.planner.cast("set_loaders", dict(self.loaders))
+        except Exception:
+            pass   # planner mid-recovery re-syncs the loader map itself
 
     # ------------------------------------------------------- supervision
     def _on_actor_failure(self, name: str, handle):
@@ -314,25 +338,53 @@ class Overlord:
         return min(view.dp_index, max(self.constructors)) \
             if self.constructors else 0
 
-    def _fetch_view(self, step: int, rank: int) -> Optional[dict]:
+    def _nudge_planner(self, step: int) -> None:
+        """Keep the plan-ahead window full: a non-blocking cast moves the
+        planner's frontier to ``step + plan_ahead`` while the trainer
+        consumes ``step``.  Monotonic + deduplicated so each target is
+        cast at most once across ranks and prefetch threads."""
+        target = step + self.cfg.plan_ahead
+        with self._lock:
+            if target <= self._nudged_to:
+                return
+            self._nudged_to = target
         try:
-            self.planner.call("ensure_planned", step, timeout=120)
+            self.planner.cast("advance_to", target)
         except Exception:
-            return None  # planner down: prefetch buffer rides through
+            pass   # planner mid-recovery: the next fetch re-nudges
+
+    def _fetch_view(self, step: int, rank: int) -> Optional[dict]:
         axis = self.cfg.strategy_params.get("axis", "DP")
         bucket = self._bucket_of(rank, axis)
         ch = self.constructors.get(bucket)
         if ch is None:
             return None
-        try:
-            out = ch.call("get_view", step, rank, axis)
-            if out is None:
-                # planner died mid-plan: the step is 'planned' but lost —
-                # replan it once (fresh buffered data; see Planner.replan)
-                if self.planner.call("replan", step):
-                    out = ch.call("get_view", step, rank, axis)
-        except Exception:
-            return None
+        out = None
+        if self.cfg.plan_ahead > 0:
+            # fast path: a prefetched step is already assembled in the
+            # constructor — no planner round-trip on the critical path
+            try:
+                out = ch.call("get_view", step, rank, axis)
+            except Exception:
+                out = None
+        if out is None:
+            # cold start / replan / pipelining off: block on the planner
+            try:
+                self.planner.call("ensure_planned", step, timeout=120)
+            except Exception:
+                return None  # planner down: prefetch buffer rides through
+            try:
+                out = ch.call("get_view", step, rank, axis)
+                if out is None:
+                    # planner died mid-plan: the step is 'planned' but
+                    # lost — replan it once (fresh buffered data; see
+                    # Planner.replan)
+                    if self.planner.call("replan", step):
+                        out = ch.call("get_view", step, rank, axis)
+            except Exception:
+                return None
+        if out is not None and self.cfg.plan_ahead > 0:
+            self._nudge_planner(step)
         return out
 
     def get_batch(self, step: int, rank: int, timeout: float = 60.0) -> dict:
@@ -419,6 +471,7 @@ class Overlord:
             if "::shadow" in name or not h.alive:
                 continue
             try:
+                # perf: serial ok — operator introspection, not step path
                 health[name] = h.call("health", timeout=10)
             except Exception:
                 health[name] = {"source": "?", "breaker": "unreachable"}

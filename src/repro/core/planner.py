@@ -15,7 +15,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from repro.core.actors import Actor, ActorHandle
+from repro.core.actors import Actor, ActorHandle, FanOut
 from repro.core.mixing import MixSchedule
 from repro.core.placetree import ClientPlaceTree
 from repro.core.primitives import LoadingPlan, Orchestration
@@ -50,7 +50,9 @@ class Planner(Actor):
                  scale_patience: int = 3,
                  ledger=None,
                  call_retry: Optional[RetryPolicy] = None,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 plan_ahead: int = 0,
+                 fanout: bool = True):
         self.tree = tree
         self.schedule = schedule
         self.strategy = strategy
@@ -75,6 +77,13 @@ class Planner(Actor):
         self.call_retry = call_retry or RetryPolicy(
             max_attempts=2, base_delay_s=0.01, max_delay_s=0.1, seed=seed)
         self._degraded_log: list[dict] = []
+        # pipelined planning (docs/PERFORMANCE.md): the Overlord casts
+        # advance_to(step + plan_ahead) after every fetch, so steps ahead
+        # of the consumer are planned on this mailbox thread while the
+        # trainer consumes; fanout=False restores the serial-RPC baseline
+        self.plan_ahead = max(int(plan_ahead), 0)
+        self.fanout = fanout
+        self._last_requested = -1
 
     # -- wiring ------------------------------------------------------------
     def set_loaders(self, loaders: dict[str, ActorHandle]):
@@ -86,8 +95,23 @@ class Planner(Actor):
 
     # -- planning ------------------------------------------------------------
     def ensure_planned(self, step: int) -> int:
+        self._last_requested = max(self._last_requested, step)
         while self._planned_through < step:
             self._plan_one(self._planned_through + 1)
+        return self._planned_through
+
+    def advance_to(self, target: int) -> int:
+        """Plan-ahead prefetch: plan steps up to ``target`` in the
+        background (the Overlord casts this — no caller blocks on it).
+        Steps planned here are already deposited in the constructors by
+        the time a client asks, so ``get_batch`` only touches the
+        planner on a cold start or after a replan."""
+        if self._planned_through >= target:
+            return self._planned_through
+        with self.telemetry.span("planner.pipeline", target=target,
+                                 behind=target - self._planned_through):
+            while self._planned_through < target:
+                self._plan_one(self._planned_through + 1)
         return self._planned_through
 
     def replan(self, step: int) -> bool:
@@ -107,19 +131,32 @@ class Planner(Actor):
     def _collect_buffers(self) -> tuple[list[dict], dict[str, str], set]:
         """Merge loader buffers; map sample_id -> owning loader name; and
         collect the set of DEGRADED sources (open circuit breaker) the
-        mixture should route around."""
+        mixture should route around.  One ``snapshot`` RPC per loader
+        (metadata + health merged), issued as a single overlapped wave:
+        the collect stage pays one max-latency, not a sum of round-trips.
+        """
+        alive = {n: h for n, h in self.loaders.items() if h.alive}
+        if self.fanout:
+            fo = FanOut(telemetry=self.telemetry)
+            for name, h in alive.items():
+                fo.submit(name, h, "snapshot", timeout=10)
+            snaps = fo.gather()
+        else:
+            snaps = {}
+            for name, h in alive.items():   # perf: serial ok — baseline
+                try:
+                    snaps[name] = h.call("snapshot", timeout=10)
+                except Exception:
+                    continue
         meta, owner, degraded = [], {}, set()
-        for name, h in self.loaders.items():
-            if not h.alive:
+        for name in alive:                 # loader order, not completion
+            snap = snaps.get(name)
+            if snap is None:
                 continue
-            try:
-                entries = h.call("summary_buffer", timeout=10)
-                health = h.call("health", timeout=10)
-            except Exception:
-                continue
+            health = snap["health"]
             if health.get("breaker") == "open":
                 degraded.add(health["source"])
-            for m in entries:
+            for m in snap["entries"]:
                 meta.append(m)
                 owner[m["sample_id"]] = name
         return meta, owner, degraded
@@ -165,44 +202,32 @@ class Planner(Actor):
             if ln is not None:
                 by_loader[ln].append(e)
         with tel.span("planner.dispatch", step=step):
+            # stage 1 — prepare: one overlapped wave across loaders, so
+            # the transform cost is the max over loaders, not the sum
+            prepared = self._prepare_wave(by_loader)
             deposits = collections.defaultdict(list)  # bkt -> [(src,s,bin)]
             for lname, entries in by_loader.items():
-                h = self.loaders.get(lname)
-                if h is None or not h.alive:
-                    continue
-                ids = [e.sample_id for e in entries]
-                try:
-                    samples = h.call("prepare", ids, timeout=60)
-                except Exception:
+                samples = prepared.get(lname)
+                if samples is None:
                     continue  # supervision promotes a shadow; degrade
                 by_id = {s.sample_id: s for s in samples}
                 for e in entries:
                     if e.sample_id in by_id:
                         deposits[e.bucket].append(
                             (e.source, by_id[e.sample_id], e.bin))
-            for bucket, h in self.constructors.items():
-                items = deposits.get(bucket, [])
-                counts = collections.Counter(src for src, _, _ in items)
-                try:
-                    accepted = h.call("expect", step,
-                                      dict(counts) or {"_": 0},
-                                      plan.bins, timeout=30,
-                                      retry=self.call_retry)
-                except Exception:
-                    continue   # constructor unreachable: skip its share
-                if accepted is False:
-                    # the step is already assembled there (we are a replan
-                    # after recovery); re-depositing would shadow samples
-                    # a client may have consumed — first plan wins
+            # stage 2 — batched ingest: expect+deposit collapsed into one
+            # RPC per constructor, fanned out as a second wave
+            accepted = self._ingest_wave(step, plan, deposits)
+            for bucket, items in deposits.items():
+                if accepted.get(bucket) is not True:
+                    # unreachable, or the step is already assembled there
+                    # (we are a replan after recovery); re-depositing
+                    # would shadow samples a client may have consumed —
+                    # first plan wins
                     continue
-                per_src = collections.defaultdict(list)
-                for src, s, b in items:
-                    per_src[src].append((s, b))
-                for src, pairs in per_src.items():
-                    h.call("deposit", step, src, [p[0] for p in pairs],
-                           [p[1] for p in pairs], timeout=30,
-                           retry=self.call_retry)
-                    tel.inc("planner_samples_planned_total", len(pairs),
+                per_src = collections.Counter(src for src, _, _ in items)
+                for src, n in per_src.items():
+                    tel.inc("planner_samples_planned_total", n,
                             source=src)
                 if self.ledger is not None:
                     for src, s, b in items:
@@ -223,6 +248,58 @@ class Planner(Actor):
         self._maybe_scale(plan)
         return plan
 
+    def _prepare_wave(self, by_loader: dict) -> dict:
+        """prepare() on every owning loader; fan-out unless in serial
+        baseline mode.  Returns loader name -> samples (absent on
+        failure — supervision handles the dead loader)."""
+        targets = {ln: (self.loaders.get(ln),
+                        [e.sample_id for e in entries])
+                   for ln, entries in by_loader.items()}
+        if self.fanout:
+            fo = FanOut(telemetry=self.telemetry)
+            for ln, (h, ids) in targets.items():
+                if h is not None and h.alive:
+                    fo.submit(ln, h, "prepare", ids, timeout=60)
+            return fo.gather()
+        prepared = {}
+        for ln, (h, ids) in targets.items():   # perf: serial ok — baseline
+            if h is None or not h.alive:
+                continue
+            try:
+                prepared[ln] = h.call("prepare", ids, timeout=60)
+            except Exception:
+                continue
+        return prepared
+
+    def _ingest_wave(self, step: int, plan: LoadingPlan,
+                     deposits: dict) -> dict:
+        """Batched expect+deposit on EVERY constructor (a bucket with no
+        items must still assemble the empty step or its clients wedge).
+        Returns bucket -> True (accepted) / False (first-plan-wins
+        replan skip); unreachable constructors are absent."""
+        payloads = {}
+        for bucket in self.constructors:
+            per_src: dict = collections.defaultdict(lambda: ([], []))
+            for src, s, b in deposits.get(bucket, []):
+                per_src[src][0].append(s)
+                per_src[src][1].append(b)
+            payloads[bucket] = dict(per_src)
+        if self.fanout:
+            fo = FanOut(telemetry=self.telemetry)
+            for bucket, h in self.constructors.items():
+                fo.submit(bucket, h, "ingest", step, payloads[bucket],
+                          plan.bins, timeout=30, retry=self.call_retry)
+            return fo.gather()
+        accepted = {}
+        for bucket, h in self.constructors.items():  # perf: serial ok
+            try:
+                accepted[bucket] = h.call(
+                    "ingest", step, payloads[bucket], plan.bins,
+                    timeout=30, retry=self.call_retry)
+            except Exception:
+                continue   # constructor unreachable: skip its share
+        return accepted
+
     def _record_plan_metrics(self, plan: LoadingPlan):
         """Balance/throughput gauges derived from the emitted plan."""
         tel = self.telemetry
@@ -231,6 +308,10 @@ class Planner(Actor):
         tel.inc("planner_steps_planned_total")
         tel.set_gauge("planner_planned_through",
                       float(self._planned_through))
+        # how far ahead of the consumer the pipeline is running; 0 means
+        # planning is on the critical path (cold start / fell behind)
+        tel.set_gauge("planner_prefetch_depth",
+                      float(self._planned_through - self._last_requested))
         bal = plan.diagnostics.get("balance:main") or {}
         loads = bal.get("bucket_loads") or []
         for bucket, load in enumerate(loads):
@@ -312,3 +393,13 @@ class Planner(Actor):
         self.schedule = pickle.loads(state["schedule"])
         self._weight_ema = dict(state["weight_ema"])
         self._history = pickle.loads(state["history"])
+        # invalidate prefetched plans past the restored step: the dead
+        # incarnation may have planned ahead of this checkpoint, but this
+        # incarnation must not trust (or replay) plans it cannot prove —
+        # ensure_planned replans forward and the constructors' first-plan-
+        # wins ingest keeps already-assembled steps authoritative
+        for s in [s for s in self._history if s > self._planned_through]:
+            del self._history[s]
+        self._replanned = set()
+        self._last_requested = min(self._last_requested,
+                                   self._planned_through)

@@ -143,6 +143,14 @@ class SourceLoader(Actor):
         """Metadata the Planner plans over (never payloads)."""
         return [record_metadata(r, self.source) for r in self._buffer]
 
+    def snapshot(self) -> dict:
+        """Buffer metadata + health in ONE round-trip.  The Planner's
+        collect stage used to pay two blocking RPCs per loader
+        (``summary_buffer`` then ``health``); planning latency is on the
+        step critical path, so the pair is collapsed into one mailbox
+        message per loader per step."""
+        return {"entries": self.summary_buffer(), "health": self.health()}
+
     # -- plan execution -------------------------------------------------------
     def prepare(self, sample_ids: list[str]) -> list[Sample]:
         """Pop the planned records from the buffer, run sample transforms

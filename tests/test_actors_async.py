@@ -1,0 +1,201 @@
+"""``call_async`` / ``cast`` / ``FanOut`` under injected faults.
+
+The pipelined planner path (docs/PERFORMANCE.md) rides entirely on these
+primitives, so their failure semantics are pinned here: futures resolve
+with results or the method's exception, kill() fails in-flight futures
+with ActorDied instead of wedging callers, and a FanOut wave preserves
+per-call RetryPolicy behavior while never raising from gather().
+"""
+import time
+from concurrent.futures import Future
+
+import pytest
+
+from repro.core.actors import ActorDied, ActorRuntime, Actor, FanOut
+from repro.core.resilience import RetryPolicy, TransientIOError
+
+
+class Worker(Actor):
+    def __init__(self, fail_first: int = 0):
+        self.seen = []
+        self.fail_budget = fail_first
+
+    def echo(self, x):
+        return x
+
+    def boom(self):
+        raise ValueError("boom")
+
+    def flaky(self):
+        if self.fail_budget > 0:
+            self.fail_budget -= 1
+            raise TransientIOError("injected hiccup")
+        return f"{self.name}:ok"
+
+    def slow(self, seconds):
+        time.sleep(seconds)
+        return "slow-done"
+
+    def note(self, x):
+        self.seen.append(x)
+
+    def notes(self):
+        return list(self.seen)
+
+
+@pytest.fixture
+def runtime():
+    rt = ActorRuntime(heartbeat_interval=0.02)
+    yield rt
+    rt.shutdown()
+
+
+# ------------------------------------------------------------ call_async
+def test_call_async_returns_future_with_result(runtime):
+    h = runtime.spawn("w", Worker())
+    fut = h.call_async("echo", 41)
+    assert isinstance(fut, Future)
+    assert fut.result(timeout=5) == 41
+
+
+def test_call_async_propagates_method_exception(runtime):
+    h = runtime.spawn("w", Worker())
+    fut = h.call_async("boom")
+    with pytest.raises(ValueError, match="boom"):
+        fut.result(timeout=5)
+
+
+def test_call_async_on_dead_handle_raises_at_submit(runtime):
+    h = runtime.spawn("w", Worker())
+    h.kill()
+    with pytest.raises(ActorDied):
+        h.call_async("echo", 1)
+
+
+def test_kill_fails_pending_async_future(runtime):
+    h = runtime.spawn("w", Worker())
+    # occupy the mailbox thread, then queue a future behind it
+    h.cast("slow", 0.3)
+    fut = h.call_async("echo", "never")
+    h.kill()
+    with pytest.raises(ActorDied):
+        fut.result(timeout=5)
+
+
+def test_async_calls_overlap_across_actors(runtime):
+    """The point of the fan-out: N slow calls cost ~1 latency, not N."""
+    handles = [runtime.spawn(f"w{i}", Worker()) for i in range(4)]
+    t0 = time.perf_counter()
+    futs = [h.call_async("slow", 0.1) for h in handles]
+    assert all(f.result(timeout=5) == "slow-done" for f in futs)
+    elapsed = time.perf_counter() - t0
+    assert elapsed < 0.3, f"async wave serialized: {elapsed:.2f}s"
+
+
+# ------------------------------------------------------------------ cast
+def test_cast_applies_side_effect_in_order(runtime):
+    h = runtime.spawn("w", Worker())
+    for x in ("a", "b", "c"):
+        h.cast("note", x)
+    assert h.call("notes", timeout=5) == ["a", "b", "c"]
+
+
+def test_cast_on_dead_handle_raises(runtime):
+    h = runtime.spawn("w", Worker())
+    h.kill()
+    with pytest.raises(ActorDied):
+        h.cast("note", "x")
+
+
+def test_cast_exception_does_not_kill_actor(runtime):
+    h = runtime.spawn("w", Worker())
+    h.cast("boom")                       # logged, no future to fail
+    assert h.call("echo", "still-alive", timeout=5) == "still-alive"
+    assert h.alive
+
+
+# ---------------------------------------------------------------- FanOut
+def test_fanout_gathers_all_results(runtime):
+    handles = {f"w{i}": runtime.spawn(f"w{i}", Worker()) for i in range(3)}
+    fo = FanOut()
+    for name, h in handles.items():
+        fo.submit(name, h, "echo", name.upper())
+    results = fo.gather()
+    assert results == {"w0": "W0", "w1": "W1", "w2": "W2"}
+    assert fo.failures == {}
+
+
+def test_fanout_retries_transient_fault_to_success(runtime):
+    h = runtime.spawn("w", Worker(fail_first=2))
+    fo = FanOut()
+    fo.submit("w", h, "flaky", timeout=5,
+              retry=RetryPolicy(max_attempts=3, base_delay_s=0.001,
+                                max_delay_s=0.01))
+    assert fo.gather() == {"w": "w:ok"}
+    assert fo.failures == {}
+
+
+def test_fanout_exhausted_retries_land_in_failures(runtime):
+    h = runtime.spawn("w", Worker(fail_first=10))
+    fo = FanOut()
+    fo.submit("w", h, "flaky", timeout=5,
+              retry=RetryPolicy(max_attempts=2, base_delay_s=0.001,
+                                max_delay_s=0.01))
+    results = fo.gather()          # never raises
+    assert results == {}
+    assert isinstance(fo.failures["w"], TransientIOError)
+
+
+def test_fanout_no_retry_policy_fails_immediately(runtime):
+    h = runtime.spawn("w", Worker(fail_first=1))
+    fo = FanOut()
+    fo.submit("w", h, "flaky", timeout=5)
+    assert fo.gather() == {}
+    assert isinstance(fo.failures["w"], TransientIOError)
+
+
+def test_fanout_partial_results_with_dead_handle(runtime):
+    alive = runtime.spawn("alive", Worker())
+    dead = runtime.spawn("dead", Worker())
+    dead.kill()
+    fo = FanOut()
+    fo.submit("alive", alive, "echo", 7)
+    fo.submit("dead", dead, "echo", 8)
+    results = fo.gather()
+    assert results == {"alive": 7}
+    assert isinstance(fo.failures["dead"], ActorDied)
+
+
+def test_fanout_actordied_is_terminal_even_with_retry(runtime):
+    """A dead handle stays dead under the same object: FanOut must not
+    spin its retry budget on it (chasing respawns is call_with_retry's
+    job)."""
+    h = runtime.spawn("w", Worker())
+    h.cast("slow", 0.3)
+    fo = FanOut()
+    fo.submit("w", h, "echo", 9, timeout=5,
+              retry=RetryPolicy(max_attempts=5, base_delay_s=0.001,
+                                max_delay_s=0.01))
+    h.kill()
+    t0 = time.perf_counter()
+    assert fo.gather() == {}
+    assert isinstance(fo.failures["w"], ActorDied)
+    assert time.perf_counter() - t0 < 1.0
+
+
+def test_fanout_metrics(runtime):
+    from repro.telemetry import Telemetry
+    tel = Telemetry(enabled=True)
+    rt = ActorRuntime(heartbeat_interval=0.02, telemetry=tel)
+    try:
+        h = rt.spawn("w", Worker())
+        fo = FanOut(telemetry=tel)
+        fo.submit("w", h, "echo", 1)
+        fo.gather()
+        h.cast("note", "x")
+        assert tel.registry.counter_total("actor_async_calls_total") >= 1
+        assert tel.registry.counter_total("actor_casts_total") >= 1
+        names = {s.name for s in tel.tracer.finished()}
+        assert "actor.fanout" in names
+    finally:
+        rt.shutdown()

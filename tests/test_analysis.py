@@ -12,8 +12,8 @@ import pytest
 from repro.analysis import (
     AnalysisError, Report, Severity, lint_actor_source, lint_dgraph,
     lint_model_config, lint_observability_source, lint_overlord_config,
-    lint_shipped_model_configs, lint_strategies, lint_strategy,
-    validate_launch,
+    lint_perf_source, lint_shipped_model_configs, lint_strategies,
+    lint_strategy, validate_launch,
 )
 from repro.analysis.lint import main as lint_main
 from repro.configs import get_config
@@ -271,6 +271,17 @@ def test_config_resilience_knobs():                  # CFG309
     assert len([f for f in rep3.errors if f.rule == "CFG309"]) == 3
 
 
+def test_config_pipelining_knobs():                  # CFG310
+    assert lint_overlord_config(good_overlord_cfg()).ok  # true negative
+    assert lint_overlord_config(
+        good_overlord_cfg(plan_ahead=0)).ok  # pipelining off is valid
+    rep = lint_overlord_config(good_overlord_cfg(plan_ahead=-1))
+    assert "CFG310" in {f.rule for f in rep.errors}
+    rep2 = lint_overlord_config(good_overlord_cfg(plan_ahead=2,
+                                                  prefetch=0))
+    assert "CFG310" in {f.rule for f in rep2.warnings}
+
+
 def test_all_shipped_model_configs_clean():          # true negative
     rep = lint_shipped_model_configs()
     assert rep.ok, rep.as_text()
@@ -525,6 +536,74 @@ def test_shipped_core_modules_obs_clean():           # OBS601 repo-wide
         if fn.endswith(".py"):
             lint_observability_file(os.path.join(core_dir, fn), rep)
     assert "OBS601" not in rules(rep), rep.as_text()
+
+
+# =====================================================================
+# performance family (PERF7xx)
+# =====================================================================
+
+SERIAL_LOOP = textwrap.dedent("""
+    def collect(handles):
+        out = {}
+        for name, h in handles.items():
+            out[name] = h.call("snapshot", timeout=10)
+        return out
+""")
+
+
+def test_serial_handle_loop_flagged():               # PERF701
+    rep = lint_perf_source(SERIAL_LOOP, "src/repro/core/planner.py")
+    assert "PERF701" in {f.rule for f in rep.warnings}
+
+
+def test_serial_loop_outside_core_not_flagged():     # PERF701 scope
+    assert lint_perf_source(SERIAL_LOOP, "src/repro/chaos/driver.py").ok
+    # the actor runtime is exempt: FanOut's gather loop lives there
+    assert lint_perf_source(SERIAL_LOOP, "src/repro/core/actors.py").ok
+
+
+def test_serial_loop_true_negatives():               # PERF701 true negative
+    src = textwrap.dedent("""
+        def pipelined(handles, planner):
+            out = {}
+            # annotated on the loop header: intentional baseline
+            for name, h in handles.items():   # perf: serial ok
+                out[name] = h.call("snapshot", timeout=10)
+            # async fan-out: does not block per handle
+            futs = {}
+            for name, h in handles.items():
+                futs[name] = h.call_async("snapshot")
+            # fixed receiver inside a step loop: one RPC per step,
+            # not per handle
+            for step in range(4):
+                planner.call("ensure_planned", step, timeout=30)
+            return out, futs
+    """)
+    assert lint_perf_source(src, "src/repro/core/planner.py").ok
+
+
+def test_serial_loop_annotation_above_call():        # PERF701 opt-out
+    src = textwrap.dedent("""
+        def report(handles):
+            health = {}
+            for name, h in handles.items():
+                # perf: serial ok — operator introspection
+                health[name] = h.call("health", timeout=10)
+            return health
+    """)
+    assert lint_perf_source(src, "src/repro/core/orchestrator.py").ok
+
+
+def test_shipped_core_modules_perf_clean():          # PERF701 repo-wide
+    import os
+    from repro.analysis import lint_perf_file
+    import repro.core as core_pkg
+    core_dir = os.path.dirname(core_pkg.__file__)
+    rep = Report()
+    for fn in sorted(os.listdir(core_dir)):
+        if fn.endswith(".py"):
+            lint_perf_file(os.path.join(core_dir, fn), rep)
+    assert "PERF701" not in rules(rep), rep.as_text()
 
 
 # =====================================================================

@@ -1,77 +1,84 @@
-"""Property-based tests for the balancing core (the paper's scheduler)."""
+"""Tests for the balancing core (the paper's scheduler).
+
+Two layers: (1) randomized equivalence of the vectorized implementations
+against the retained ``_*_reference`` originals — these run everywhere
+(stdlib ``random`` only); (2) hypothesis property tests, defined only
+when the dev extra is installed.
+"""
+import random
+
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip(
-    "hypothesis", reason="property tests need the dev extra "
-                         "(pip install -e .[dev])")
-from hypothesis import given, settings, strategies as st  # noqa: E402
-
 from repro.core.balance import (
-    balance_items, bin_loads, greedy_binpack, imbalance, karmarkar_karp,
-    multi_greedy_binpack,
+    METHODS, REFERENCE_METHODS, balance_items, bin_loads, greedy_binpack,
+    imbalance, karmarkar_karp, multi_greedy_binpack,
 )
 
-costs_strategy = st.lists(
-    st.floats(min_value=0.0, max_value=1e6, allow_nan=False,
-              allow_infinity=False),
-    min_size=1, max_size=200)
+
+# ----------------------------------------------------- vectorized == reference
+def _random_costs(rng, n):
+    if rng.random() < 0.3:
+        # heavy ties: stresses stable-sort / heap tie-breaking
+        return [rng.choice([1.0, 2.0, 4.0, 4.0]) for _ in range(n)]
+    return [rng.random() * 10.0 for _ in range(n)]
 
 
-@given(costs_strategy, st.integers(1, 16))
-@settings(max_examples=100, deadline=None)
-def test_greedy_assignment_valid(costs, n_bins):
-    assign = greedy_binpack(costs, n_bins)
-    assert len(assign) == len(costs)
-    assert all(0 <= a < n_bins for a in assign)
-    # conservation: every item assigned exactly once
-    assert sum(bin_loads(costs, assign, n_bins)) == pytest.approx(
-        sum(costs), rel=1e-6, abs=1e-6)
+@pytest.mark.parametrize("method", ["greedy_binpack", "karmarkar_karp"])
+def test_vectorized_matches_reference_assignments(method):
+    rng = random.Random(1234)
+    for _ in range(200):
+        n = rng.randrange(0, 64)
+        k = rng.randrange(1, 9)
+        costs = _random_costs(rng, n)
+        got = METHODS[method](costs, k)
+        want = REFERENCE_METHODS[method](costs, k)
+        # item-for-item identical, hence identical imbalance too
+        assert got == want, (method, n, k, costs)
 
 
-@given(costs_strategy, st.integers(1, 8))
-@settings(max_examples=100, deadline=None)
-def test_greedy_within_4_3_of_round_robin(costs, n_bins):
-    """LPT is 4/3-of-OPT, hence within 4/3 of ANY assignment's max load
-    (instance-wise dominance over round-robin does not hold in general)."""
-    assign = greedy_binpack(costs, n_bins)
-    rr = [i % n_bins for i in range(len(costs))]
-    g = max(bin_loads(costs, assign, n_bins))
-    r = max(bin_loads(costs, rr, n_bins))
-    assert g <= 4.0 / 3.0 * r + 1e-6
+def test_multi_greedy_matches_reference_assignments():
+    rng = random.Random(99)
+    for _ in range(200):
+        n = rng.randrange(0, 48)
+        k = rng.randrange(1, 9)
+        d = rng.randrange(1, 4)
+        vecs = [[rng.random() * 5.0 for _ in range(d)] for _ in range(n)]
+        got = multi_greedy_binpack(vecs, k)
+        want = REFERENCE_METHODS["multi_greedy_binpack"](vecs, k)
+        assert got == want, (n, k, d, vecs)
 
 
-@given(costs_strategy, st.integers(1, 8))
-@settings(max_examples=50, deadline=None)
-def test_greedy_within_4_3_of_lower_bound(costs, n_bins):
-    """LPT is a 4/3-approx: max load <= 4/3 * OPT + max item slack."""
-    assign = greedy_binpack(costs, n_bins)
-    got = max(bin_loads(costs, assign, n_bins))
-    lower = max(sum(costs) / n_bins, max(costs) if costs else 0.0)
-    assert got <= 4.0 / 3.0 * lower + 1e-6
+def test_vectorized_imbalance_never_worse():
+    """Belt-and-braces for the acceptance bar: even if assignments ever
+    diverge, the vectorized straggler must be same-or-better."""
+    rng = random.Random(7)
+    for _ in range(100):
+        n = rng.randrange(1, 64)
+        k = rng.randrange(1, 9)
+        costs = _random_costs(rng, n)
+        for method in ("greedy_binpack", "karmarkar_karp"):
+            got = imbalance(bin_loads(
+                costs, METHODS[method](costs, k), k))
+            want = imbalance(bin_loads(
+                costs, REFERENCE_METHODS[method](costs, k), k))
+            assert got <= want + 1e-9
 
 
-@given(st.lists(st.floats(min_value=0.1, max_value=1e4), min_size=2,
-                max_size=40), st.integers(2, 6))
-@settings(max_examples=50, deadline=None)
-def test_karmarkar_karp_valid_and_competitive(costs, n_bins):
-    kk = karmarkar_karp(costs, n_bins)
-    assert len(kk) == len(costs)
-    assert all(0 <= a < n_bins for a in kk)
-    assert sum(bin_loads(costs, kk, n_bins)) == pytest.approx(sum(costs))
-    # KK should not be wildly worse than greedy
-    kk_max = max(bin_loads(costs, kk, n_bins))
-    g_max = max(bin_loads(costs, greedy_binpack(costs, n_bins), n_bins))
-    assert kk_max <= 2.0 * g_max + 1e-6
-
-
-@given(st.lists(st.tuples(st.floats(0, 1e4), st.floats(0, 1e4)),
-                min_size=1, max_size=60), st.integers(1, 8))
-@settings(max_examples=50, deadline=None)
-def test_multi_greedy_valid(vectors, n_bins):
-    assign = multi_greedy_binpack(vectors, n_bins)
-    assert len(assign) == len(vectors)
-    assert all(0 <= a < n_bins for a in assign)
+def test_empty_and_single_item_edges():
+    assert greedy_binpack([], 3) == []
+    assert karmarkar_karp([], 3) == []
+    assert multi_greedy_binpack([], 3) == []
+    assert greedy_binpack([5.0], 3) == REFERENCE_METHODS[
+        "greedy_binpack"]([5.0], 3)
+    assert karmarkar_karp([5.0], 3) == REFERENCE_METHODS[
+        "karmarkar_karp"]([5.0], 3)
+    with pytest.raises(ValueError):
+        greedy_binpack([1.0], 0)
+    with pytest.raises(ValueError):
+        karmarkar_karp([1.0], 0)
+    with pytest.raises(ValueError):
+        multi_greedy_binpack([[1.0]], 0)
 
 
 def test_balance_reduces_imbalance_on_skewed_data():
@@ -91,3 +98,75 @@ def test_balance_reduces_imbalance_on_skewed_data():
 def test_unknown_method_raises():
     with pytest.raises(ValueError):
         balance_items([1.0], 2, "nope")
+
+
+# ------------------------------------------------------- property tests
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:     # pragma: no cover - dev extra absent
+    given = None
+
+if given is not None:
+    costs_strategy = st.lists(
+        st.floats(min_value=0.0, max_value=1e6, allow_nan=False,
+                  allow_infinity=False),
+        min_size=1, max_size=200)
+
+    @given(costs_strategy, st.integers(1, 16))
+    @settings(max_examples=100, deadline=None)
+    def test_greedy_assignment_valid(costs, n_bins):
+        assign = greedy_binpack(costs, n_bins)
+        assert len(assign) == len(costs)
+        assert all(0 <= a < n_bins for a in assign)
+        # conservation: every item assigned exactly once
+        assert sum(bin_loads(costs, assign, n_bins)) == pytest.approx(
+            sum(costs), rel=1e-6, abs=1e-6)
+
+    @given(costs_strategy, st.integers(1, 8))
+    @settings(max_examples=100, deadline=None)
+    def test_greedy_within_4_3_of_round_robin(costs, n_bins):
+        """LPT is 4/3-of-OPT, hence within 4/3 of ANY assignment's max
+        load (instance-wise dominance over round-robin does not hold in
+        general)."""
+        assign = greedy_binpack(costs, n_bins)
+        rr = [i % n_bins for i in range(len(costs))]
+        g = max(bin_loads(costs, assign, n_bins))
+        r = max(bin_loads(costs, rr, n_bins))
+        assert g <= 4.0 / 3.0 * r + 1e-6
+
+    @given(costs_strategy, st.integers(1, 8))
+    @settings(max_examples=50, deadline=None)
+    def test_greedy_within_4_3_of_lower_bound(costs, n_bins):
+        """LPT is a 4/3-approx: max load <= 4/3 * OPT + max item slack."""
+        assign = greedy_binpack(costs, n_bins)
+        got = max(bin_loads(costs, assign, n_bins))
+        lower = max(sum(costs) / n_bins, max(costs) if costs else 0.0)
+        assert got <= 4.0 / 3.0 * lower + 1e-6
+
+    @given(st.lists(st.floats(min_value=0.1, max_value=1e4), min_size=2,
+                    max_size=40), st.integers(2, 6))
+    @settings(max_examples=50, deadline=None)
+    def test_karmarkar_karp_valid_and_competitive(costs, n_bins):
+        kk = karmarkar_karp(costs, n_bins)
+        assert len(kk) == len(costs)
+        assert all(0 <= a < n_bins for a in kk)
+        assert sum(bin_loads(costs, kk, n_bins)) == pytest.approx(
+            sum(costs))
+        # KK should not be wildly worse than greedy
+        kk_max = max(bin_loads(costs, kk, n_bins))
+        g_max = max(bin_loads(costs, greedy_binpack(costs, n_bins),
+                              n_bins))
+        assert kk_max <= 2.0 * g_max + 1e-6
+
+    @given(st.lists(st.tuples(st.floats(0, 1e4), st.floats(0, 1e4)),
+                    min_size=1, max_size=60), st.integers(1, 8))
+    @settings(max_examples=50, deadline=None)
+    def test_multi_greedy_valid(vectors, n_bins):
+        assign = multi_greedy_binpack(vectors, n_bins)
+        assert len(assign) == len(vectors)
+        assert all(0 <= a < n_bins for a in assign)
+else:
+    @pytest.mark.skip(reason="property tests need the dev extra "
+                             "(pip install -e .[dev])")
+    def test_property_suite_needs_hypothesis():
+        pass

@@ -13,6 +13,7 @@ against the checked-in golden; regenerate deliberately with
 """
 import json
 import os
+from concurrent.futures import Future
 
 import pytest
 
@@ -41,9 +42,21 @@ class _SyncHandle:
 
     def __init__(self, actor):
         self._actor = actor
+        self.name = getattr(actor, "name", type(actor).__name__)
 
     def call(self, method, *args, timeout=None, retry=None, **kwargs):
         return getattr(self._actor, method)(*args, **kwargs)
+
+    def call_async(self, method, *args, **kwargs):
+        """Fan-out compatible: an already-resolved Future, so the
+        pipelined planner path stays single-threaded and deterministic
+        here."""
+        fut = Future()
+        try:
+            fut.set_result(getattr(self._actor, method)(*args, **kwargs))
+        except Exception as e:       # pragma: no cover - exercised live
+            fut.set_exception(e)
+        return fut
 
     def cast(self, method, *args, **kwargs):
         getattr(self._actor, method)(*args, **kwargs)
@@ -74,9 +87,12 @@ def run_seeded_plane(tmpdir: str) -> list[dict]:
         dict(costfn=backbone_cost(get_config("qwen3-8b")), broadcast=(),
              n_bins=1),
         loaders=loaders, constructors=constructors,
-        samples_per_step=8, seed=5, telemetry=tel)
+        samples_per_step=8, seed=5, plan_ahead=2, telemetry=tel)
     for step in range(STEPS):
         planner.ensure_planned(step)
+        # pipelined path: pull the frontier ahead like the Overlord's
+        # plan-ahead nudge, so planner.pipeline spans are golden-covered
+        planner.advance_to(step + 2)
     for h in loaders.values():
         h.call("on_stop")
     return canonical_spans(tel.tracer.finished())
