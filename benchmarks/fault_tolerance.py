@@ -140,6 +140,70 @@ def chaos_soak_profile(seed: int = 1234, steps: int = 60):
          f"ledger_ok={summary['ok']};delivered={summary['delivered']}")
 
 
+def recovery_rto_profile(cadence: int, steps: int = 20):
+    """RTO vs checkpoint cadence: run a job with durable manifests, kill
+    the whole process, time ``resume()`` on a fresh incarnation, then
+    prove continuity with the persisted delivery ledger."""
+    import shutil
+    import tempfile
+
+    paths = materialize_group(
+        [dataclasses.replace(s, n_samples=512)
+         for s in coyo_like_specs(3)], source_root())
+    tree = ClientPlaceTree([("PP", 1), ("DP", 2), ("CP", 1), ("TP", 1)])
+    cfg = get_config("qwen3-8b")
+    ckdir = tempfile.mkdtemp(prefix=f"bench_rto_c{cadence}_")
+
+    def mk_job(start=True):
+        ov = Overlord(paths, tree,
+                      StaticSchedule({n: 1.0 for n in paths}),
+                      OverlordConfig(
+                          seq_len=256, rows_per_microbatch=2, n_bins=1,
+                          strategy="backbone_balance",
+                          strategy_params=dict(costfn=backbone_cost(cfg),
+                                               broadcast=()),
+                          prefetch=2, shadows=True, ledger=True,
+                          buffer_target=96, checkpoint_dir=ckdir,
+                          loader_ckpt_every=cadence,
+                          restore_delay_s=RESTORE_DELAY_S))
+        return ov.start() if start else ov
+
+    ov = mk_job()
+    ov2 = None
+    try:
+        for step in range(steps):
+            for r in range(ov.tree.world):
+                ov.get_batch(step, r, timeout=30)
+            ov.step_done(step)
+        ov.simulate_process_death()
+        t0 = time.perf_counter()
+        ov2 = mk_job(start=False).resume()
+        rto = time.perf_counter() - t0
+        rep = ov2.resume_report
+        for step in range(rep["step"] + 1, rep["step"] + 4):
+            for r in range(ov2.tree.world):
+                ov2.get_batch(step, r, timeout=30)
+            ov2.step_done(step)
+        ok = ov2.ledger.verify(strict=False)["ok"]
+    finally:
+        if ov2 is not None:
+            ov2.shutdown()
+        else:
+            ov.shutdown()
+        shutil.rmtree(ckdir, ignore_errors=True)
+    emit(f"recovery.rto.ckpt_every{cadence}", rto * 1e6,
+         f"resume_s={rto:.4f};replayed_steps={rep['replayed_steps']};"
+         f"epoch={rep['epoch']};restored={len(rep['restored'])};"
+         f"ledger_ok={ok}")
+
+
+def run_recovery():
+    # the recovery-time tradeoff: sparser actor cuts shrink steady-state
+    # checkpoint work but widen the replay window a resume must cover
+    for cadence in (1, 4, 8):
+        recovery_rto_profile(cadence)
+
+
 def run():
     # prefetch horizon 2 x 20ms < 50ms restore => stalls; 4 x 20ms covers
     planner_failure_profile(prefetch=2)

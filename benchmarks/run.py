@@ -8,6 +8,7 @@
   Fig. 14/A  parallelism_redundancy.run simulated-backend redundancy
   Fig. 15    source_parallel.run        source-partitioning memory
   Fig. 16    fault_tolerance.run        planner/loader failure latency
+  recovery   fault_tolerance.run_recovery  resume RTO vs ckpt cadence
   App. B     constructor_scaling.run    constructor fan-in at scale
   kernels    kernel_bench.run           segment-skip tile evidence
   roofline   roofline.run               dry-run roofline terms
@@ -52,6 +53,7 @@ def main(argv=None) -> None:
         ("fig14/A", parallelism_redundancy.run),
         ("fig15", source_parallel.run),
         ("fig16", fault_tolerance.run),
+        ("recovery", fault_tolerance.run_recovery),
         ("appB", constructor_scaling.run),
         ("kernels", kernel_bench.run),
         ("roofline", roofline.run),

@@ -6,9 +6,11 @@ breaks that model: actor state mutated from a side thread, locks held
 inside an actor (a smell that state already leaks across threads),
 synchronous ``call()`` a mailbox thread can block on forever,
 half-implemented checkpoint/restore pairs that silently corrupt
-recovery, and (ACT506, data-plane modules only) actor ``call()`` sites
-that bypass the RetryPolicy, where one transient fault crashes the
-caller.
+recovery (ACT505), checkpoint keys that never round-trip through
+``restore_state`` (ACT507 — saved-but-unread state silently vanishes on
+durable resume), and (ACT506, data-plane modules only) actor ``call()``
+sites that bypass the RetryPolicy, where one transient fault crashes
+the caller.
 """
 from __future__ import annotations
 
@@ -72,6 +74,50 @@ def _thread_target(call: ast.Call) -> Optional[ast.AST]:
     return None
 
 
+def _returned_dict_keys(fn: ast.FunctionDef) -> set[str]:
+    """Constant string keys of every dict literal ``fn`` returns."""
+    keys: set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Return) and isinstance(node.value, ast.Dict):
+            for k in node.value.keys:
+                if isinstance(k, ast.Constant) and isinstance(k.value, str):
+                    keys.add(k.value)
+    return keys
+
+
+def _state_keys_read(fn: ast.FunctionDef, param: str) -> Optional[set[str]]:
+    """Keys ``fn`` reads off its ``param`` dict via ``param["k"]`` /
+    ``param.get("k")``.  Returns None when ``param`` is also consumed
+    generically (iterated, passed on, ``.items()``/``.update`` style) —
+    then every key is potentially read and nothing can be proven."""
+    read: set[str] = set()
+    opaque_parents: set[int] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Subscript) \
+                and isinstance(node.value, ast.Name) \
+                and node.value.id == param:
+            opaque_parents.add(id(node.value))
+            if isinstance(node.slice, ast.Constant) \
+                    and isinstance(node.slice.value, str):
+                read.add(node.slice.value)
+        elif isinstance(node, ast.Call) \
+                and isinstance(node.func, ast.Attribute) \
+                and node.func.attr == "get" \
+                and isinstance(node.func.value, ast.Name) \
+                and node.func.value.id == param \
+                and node.args \
+                and isinstance(node.args[0], ast.Constant) \
+                and isinstance(node.args[0].value, str):
+            opaque_parents.add(id(node.func.value))
+            read.add(node.args[0].value)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and node.id == param \
+                and isinstance(node.ctx, ast.Load) \
+                and id(node) not in opaque_parents:
+            return None   # whole-dict use: cannot prove a key unread
+    return read
+
+
 def _expr_mentions_self_name(node: ast.AST) -> bool:
     """True for expressions like ``self.runtime.get(self.name)``."""
     for sub in ast.walk(node):
@@ -92,6 +138,7 @@ class _ActorClassLinter:
 
     def run(self):
         self._check_ckpt_pair()
+        self._check_ckpt_roundtrip()
         for m in self.methods.values():
             self._check_method(m)
 
@@ -109,6 +156,36 @@ class _ActorClassLinter:
                 "the CheckpointStore saves what checkpoint_state returns "
                 "and recovery feeds it to restore_state; implementing "
                 "one side silently breaks the fault-tolerance path")
+
+    # ACT507 ------------------------------------------------------------
+    def _check_ckpt_roundtrip(self):
+        """checkpoint_state()'s persisted keys must round-trip through
+        restore_state(): a key that is saved but never read back silently
+        vanishes on recovery — the durable-manifest path then restores an
+        actor that LOOKS healthy but lost state."""
+        ck = self.methods.get("checkpoint_state")
+        rs = self.methods.get("restore_state")
+        if ck is None or rs is None:
+            return   # the missing half is ACT505's finding
+        saved = _returned_dict_keys(ck)
+        if not saved:
+            return   # non-literal payload: nothing provable statically
+        params = [a.arg for a in rs.args.args if a.arg != "self"]
+        if not params:
+            return
+        read = _state_keys_read(rs, params[0])
+        if read is None:
+            return   # whole-dict consumption (e.g. update/iteration)
+        missing = sorted(saved - read)
+        if missing:
+            self.rep.add(
+                "ACT507", Severity.ERROR,
+                f"actor {self.cls.name!r}: restore_state() never reads "
+                f"key(s) {missing} persisted by checkpoint_state()",
+                f"{self.where}:{rs.lineno}",
+                "every persisted key must be consumed on restore (or "
+                "dropped from the checkpoint) — unread keys are state "
+                "that silently fails to survive recovery")
 
     def _check_method(self, m: ast.FunctionDef):
         for node in ast.walk(m):

@@ -126,6 +126,23 @@ def lint_overlord_config(cfg: OverlordConfig,
                 "prefetch; enable client prefetch to benefit from "
                 "pipelined planning")
 
+    # CFG311 — durable job-recovery knobs (manifest cadence / retention)
+    if cfg.manifest_every < 1 or cfg.keep_epochs < 1:
+        rep.add("CFG311", Severity.ERROR,
+                f"manifest_every={cfg.manifest_every} / keep_epochs="
+                f"{cfg.keep_epochs} must be >= 1", where,
+                "manifest_every paces the atomic epoch commit point and "
+                "keep_epochs is the corruption-fallback depth; < 1 "
+                "leaves the job without a resumable epoch")
+    elif cfg.checkpoint_dir \
+            and cfg.loader_ckpt_every % max(cfg.manifest_every, 1) != 0:
+        rep.add("CFG311", Severity.WARNING,
+                f"manifest_every={cfg.manifest_every} does not divide "
+                f"loader_ckpt_every={cfg.loader_ckpt_every}", where,
+                "actor cuts land only on steps divisible by BOTH "
+                "cadences; misaligned cadences stretch the replay "
+                "window a resume must cover")
+
     # tree-dependent rules
     if tree is not None:
         _lint_against_tree(cfg, tree, n_sources, rep, where)

@@ -20,7 +20,8 @@ soak compares across two same-seed runs.
 from __future__ import annotations
 
 import threading
-from typing import Optional
+import time
+from typing import Callable, Optional
 
 from repro.chaos.schedules import FaultSchedule
 from repro.core.resilience import TransientIOError
@@ -30,11 +31,24 @@ from repro.telemetry import ensure_telemetry
 
 class FaultInjector:
     def __init__(self, overlord, schedule: FaultSchedule,
-                 install_storage_hook: bool = True):
+                 install_storage_hook: bool = True,
+                 resume_factory: Optional[Callable[[], object]] = None):
+        """``resume_factory`` () -> started-or-resumed Overlord: required
+        when the schedule contains ``process_death`` events.  On such an
+        event the injector tears the CURRENT overlord's runtime down
+        abruptly (``simulate_process_death``) and swaps in the factory's
+        fresh incarnation (which should call ``Overlord.resume()``), so
+        the soak driver keeps using ``injector.ov``."""
         self.ov = overlord
         self.schedule = schedule
+        self.resume_factory = resume_factory
+        if "process_death" in schedule.kinds() and resume_factory is None:
+            raise ValueError(
+                "schedule contains process_death events; FaultInjector "
+                "needs a resume_factory to bring the job back")
         self.applied: list[tuple] = []
         self.errors: list[tuple] = []
+        self.resumes: list[dict] = []
         self._lock = threading.Lock()
         self._io_budget: dict[str, int] = {}   # storage path -> fail count
         self._prev_hook = None
@@ -80,7 +94,9 @@ class FaultInjector:
         against supervision, and the timeline two same-seed runs compare
         must not depend on it.  Action failures go to ``errors``."""
         params = ev.param_dict()
-        if ev.kind == "crash_planner":
+        if ev.kind == "process_death":
+            entry = (step, ev.kind, "job", ev.params)
+        elif ev.kind == "crash_planner":
             entry = (step, ev.kind, "planner", ev.params)
         else:
             names = self.primary_loaders()
@@ -97,7 +113,17 @@ class FaultInjector:
                       target=str(entry[2])) as sp:
             sp.stamp_fault(ev.kind)
             try:
-                if ev.kind == "crash_planner":
+                if ev.kind == "process_death":
+                    # whole-job crash: runtime torn down with no
+                    # supervision, then a fresh incarnation resumes from
+                    # the on-disk manifest and takes over as self.ov
+                    t0 = time.time()
+                    self.ov.simulate_process_death()
+                    self.ov = self.resume_factory()
+                    self.resumes.append({
+                        "step": step, "downtime_s": time.time() - t0,
+                        "report": getattr(self.ov, "resume_report", None)})
+                elif ev.kind == "crash_planner":
                     self.ov.inject_planner_failure()
                 elif ev.kind == "crash_loader":
                     self.ov.loaders[entry[2]].kill()

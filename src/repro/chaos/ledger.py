@@ -67,6 +67,47 @@ class DeliveryLedger:
         with self._lock:
             self._quarantined[sample_id] = source
 
+    # -- persistence ------------------------------------------------------
+    def snapshot(self) -> dict:
+        """Point-in-time copy of the full accounting state, suitable for
+        pickling into a checkpoint manifest (job-level recovery: the
+        resumed process must remember what was already delivered, or the
+        first post-resume verify() would report phantom duplicates/loss).
+        """
+        with self._lock:
+            return {
+                "planned": dict(self._planned),
+                "delivered": {k: sorted(v)
+                              for k, v in self._delivered.items()},
+                "by_rank": {k: {r: sorted(ids) for r, ids in v.items()}
+                            for k, v in self._by_rank.items()},
+                "dropped": dict(self._dropped),
+                "quarantined": dict(self._quarantined),
+                "max_delivered_step": self._max_delivered_step,
+            }
+
+    def restore(self, snap: dict) -> None:
+        """Inverse of ``snapshot`` — replaces this ledger's state."""
+        with self._lock:
+            self._planned = {k: tuple(v)
+                             for k, v in snap["planned"].items()}
+            self._delivered = {k: set(v)
+                               for k, v in snap["delivered"].items()}
+            self._by_rank = collections.defaultdict(dict)
+            for key, per_rank in snap["by_rank"].items():
+                self._by_rank[tuple(key) if isinstance(key, (list, tuple))
+                              else key] = {
+                    r: frozenset(ids) for r, ids in per_rank.items()}
+            self._dropped = dict(snap["dropped"])
+            self._quarantined = dict(snap["quarantined"])
+            self._max_delivered_step = int(snap["max_delivered_step"])
+
+    def delivered_ids(self) -> set:
+        """All sample ids any rank has ever received (resume seeds the
+        Overlord's unique-delivery telemetry set from this)."""
+        with self._lock:
+            return set(self._delivered)
+
     # -- verification -----------------------------------------------------
     def verify(self, through_step: Optional[int] = None,
                strict: bool = True) -> dict:

@@ -20,8 +20,15 @@ import json
 import random
 from typing import Iterable, Optional
 
-KINDS = ("crash_loader", "crash_planner", "hang", "slow", "io_error",
-         "corrupt")
+# kinds the in-process supervisor absorbs without losing the Overlord;
+# generate() draws from these by default so pre-existing seeded
+# timelines stay byte-identical
+DEFAULT_KINDS = ("crash_loader", "crash_planner", "hang", "slow",
+                 "io_error", "corrupt")
+# "process_death" tears down the WHOLE ActorRuntime mid-step; recovery
+# comes from the on-disk manifest via Overlord.resume (the injector
+# requires a resume_factory to accept such schedules)
+KINDS = DEFAULT_KINDS + ("process_death",)
 
 # deterministic parameter menus per kind (drawn by the seeded generator);
 # kept small so soak tests stay fast
@@ -32,6 +39,7 @@ _PARAM_MENU = {
     "corrupt": [{"samples": 2}, {"samples": 4}, {"samples": 6}],
     "crash_loader": [{}],
     "crash_planner": [{}],
+    "process_death": [{}],
 }
 
 
@@ -87,7 +95,7 @@ class FaultSchedule:
     # -- generation -------------------------------------------------------
     @classmethod
     def generate(cls, seed: int, steps: int, rate: float = 0.12,
-                 kinds: tuple = KINDS, n_targets: int = 16,
+                 kinds: tuple = DEFAULT_KINDS, n_targets: int = 16,
                  warmup: int = 5,
                  ensure: tuple = ("crash_loader", "corrupt", "io_error"),
                  ) -> "FaultSchedule":
@@ -118,6 +126,38 @@ class FaultSchedule:
                 step=min(step, steps - 1), kind=kind,
                 target=i % max(n_targets, 1),
                 params=tuple(sorted(params.items()))))
+        return cls(events, seed=seed)
+
+    @classmethod
+    def process_death_soak(cls, seed: int, steps: int, deaths: int = 3,
+                           noise_rate: float = 0.08, warmup: int = 5,
+                           n_targets: int = 16) -> "FaultSchedule":
+        """Deterministic schedule for the durable-recovery soak: ``deaths``
+        whole-process deaths spread evenly across the run, plus latency-
+        only background noise (hang/slow).  Data-perturbing kinds
+        (io_error/corrupt/crashes) are deliberately EXCLUDED — they change
+        buffer state nondeterministically across incarnations, and this
+        soak's exactly-once verdict requires the resumed replan to re-pick
+        the same samples the dead incarnation planned."""
+        rng = random.Random(seed)
+        deaths = max(int(deaths), 1)
+        events = []
+        span = max(steps - warmup, deaths)
+        for i in range(deaths):
+            step = warmup + (span * (2 * i + 1)) // (2 * deaths)
+            events.append(FaultEvent(step=min(step, steps - 1),
+                                     kind="process_death"))
+        death_steps = {ev.step for ev in events}
+        for step in range(warmup, steps):
+            if step in death_steps or rng.random() >= noise_rate:
+                continue
+            kind = ("hang", "slow")[rng.randrange(2)]
+            menu = _PARAM_MENU[kind]
+            events.append(FaultEvent(
+                step=step, kind=kind,
+                target=rng.randrange(max(n_targets, 1)),
+                params=tuple(sorted(menu[rng.randrange(len(menu))]
+                                    .items()))))
         return cls(events, seed=seed)
 
     # -- file format ------------------------------------------------------

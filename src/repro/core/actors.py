@@ -425,3 +425,14 @@ class ActorRuntime:
         for h in self.actors().values():
             if h.alive:
                 h.stop()
+
+    def terminate(self):
+        """Abrupt whole-runtime death (process-crash analog): every actor
+        is killed with pending mail dropped, no on_stop, and — unlike
+        individual kills — NO failure callbacks fire, because the
+        supervisor died with the process.  Recovery must come from disk
+        (Overlord.resume), not from in-process supervision."""
+        self._failure_cbs.clear()
+        self._stop.set()
+        for h in self.actors().values():
+            h.kill()

@@ -14,7 +14,8 @@ from typing import Callable, Optional
 
 class TrainerClient:
     def __init__(self, rank: int, fetch: Callable[[int, int], Optional[dict]],
-                 prefetch: int = 2, poll_interval: float = 0.002):
+                 prefetch: int = 2, poll_interval: float = 0.002,
+                 start_step: int = 0):
         self.rank = rank
         self._fetch = fetch            # (step, rank) -> view dict | None
         self.prefetch = prefetch
@@ -22,7 +23,9 @@ class TrainerClient:
         self._buf: dict[int, dict] = {}
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
-        self._next_wanted = 0
+        # start_step > 0 on job resume: steps before it were consumed by
+        # the previous incarnation and must not be prefetched again
+        self._next_wanted = start_step
         self._stop = threading.Event()
         self.stall_log: list[tuple[int, float]] = []   # (step, stall_s)
         self.fetch_log: list[tuple[int, float]] = []   # (step, fetch_s)

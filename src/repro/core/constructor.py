@@ -180,9 +180,22 @@ class DataConstructor(Actor):
         return total
 
     def checkpoint_state(self) -> dict:
+        # ``ready`` carries the in-flight window: steps assembled but not
+        # yet consumed when the cut was taken.  A resumed job serves the
+        # gap between the delivery frontier and the plan frontier from
+        # these views — their samples were already popped from the loader
+        # buffers, so they cannot be replanned, only restored.
         return {"bucket": self.bucket, "built_steps": self._built_steps,
-                "dropped": self._dropped}
+                "dropped": self._dropped,
+                "ready": {s: {"bins": list(e["bins"])}
+                          for s, e in self._ready.items()}}
 
     def restore_state(self, state: dict):
+        if state.get("bucket", self.bucket) != self.bucket:
+            raise ValueError(
+                f"checkpoint for bucket {state.get('bucket')} offered to "
+                f"constructor bucket {self.bucket}")
         self._built_steps = state["built_steps"]
         self._dropped = state["dropped"]
+        self._ready.update({int(s): {"bins": list(e["bins"])}
+                            for s, e in state.get("ready", {}).items()})

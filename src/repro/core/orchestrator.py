@@ -62,6 +62,13 @@ class OverlordConfig:
     planner_ckpt_every: int = 1
     loader_ckpt_every: int = 8
     restore_delay_s: float = 0.0     # simulated persistent-store latency
+    # durable job recovery (docs/FAULT_TOLERANCE.md; validated by CFG311):
+    # with checkpoint_dir set, every manifest_every-th step_done commits a
+    # crash-consistent epoch manifest (blobs + delivery ledger) that
+    # Overlord.resume() restarts from; keep_epochs old epochs are retained
+    # for corruption fallback before GC reclaims them
+    manifest_every: int = 1
+    keep_epochs: int = 3
     vocab_size: int = 50_000
     seed: int = 0
     fill_factor: float = 0.6          # packing headroom
@@ -102,7 +109,8 @@ class Overlord:
         self.store = CheckpointStore(cfg.checkpoint_dir,
                                      cfg.planner_ckpt_every,
                                      cfg.loader_ckpt_every,
-                                     cfg.restore_delay_s)
+                                     cfg.restore_delay_s,
+                                     keep_epochs=cfg.keep_epochs)
         self.dlq = DeadLetterQueue(cfg.dlq_capacity)
         self.ledger = None
         if cfg.ledger:
@@ -121,6 +129,7 @@ class Overlord:
         self._nudged_to = -1      # highest plan-ahead target cast so far
         self._delivered_ids: set = set()   # unique data-role sample ids
         self.recovery_log: list[dict] = []
+        self.resume_report: Optional[dict] = None
 
     # ----------------------------------------------------------- profiles
     def _profile_sources(self) -> list[SourceProfile]:
@@ -135,9 +144,17 @@ class Overlord:
         return profs
 
     # -------------------------------------------------------------- start
-    def start(self):
+    def start(self, spawn_clients: bool = True):
+        """Bring up the data plane.  ``spawn_clients=False`` defers the
+        trainer clients (resume uses this: clients start prefetching the
+        moment they exist, and a client prefetching step 0 against a
+        restored-but-not-yet-replayed plane would corrupt it)."""
         assert not self._started
         cfg = self.cfg
+        if cfg.checkpoint_dir:
+            # claim the job fence FIRST: from here on, any zombie
+            # incarnation of a previous process is locked out of commits
+            self.store.acquire_fence()
         if cfg.samples_per_step == 0:
             nb = self.tree.buckets(
                 cfg.strategy_params.get("axis", "DP"))
@@ -206,11 +223,16 @@ class Overlord:
                           retry=self.cfg.retry)
 
         # trainer clients
-        for rank in range(self.tree.world):
-            self.clients[rank] = TrainerClient(
-                rank, self._fetch_view, prefetch=cfg.prefetch)
+        if spawn_clients:
+            self._spawn_clients(start_step=0)
         self._started = True
         return self
+
+    def _spawn_clients(self, start_step: int) -> None:
+        for rank in range(self.tree.world):
+            self.clients[rank] = TrainerClient(
+                rank, self._fetch_view, prefetch=self.cfg.prefetch,
+                start_step=start_step)
 
     def _make_loader(self, lc: LoaderConfig) -> SourceLoader:
         return SourceLoader(lc.source, self.paths[lc.source],
@@ -438,11 +460,152 @@ class Overlord:
                 self.store.maybe_save("loader", name, step, h)
                 if self.shadow_mgr:
                     self.shadow_mgr.sync(name, h, step=step)
+            # constructor state is tiny (counters), so it rides the
+            # planner's every-step cadence rather than the loaders'
+            for b, h in list(self.constructors.items()):
+                self.store.maybe_save("planner", f"constructor:{b}",
+                                      step, h)
             if self.ledger is not None:
                 # mirror quarantines so verify() accounts them (idempotent)
                 for it in self.dlq.items():
                     self.ledger.record_quarantined(
                         it["sample_id"], it["source"], it["reason"])
+            if self.cfg.checkpoint_dir \
+                    and step % max(self.cfg.manifest_every, 1) == 0:
+                # atomic commit point for job-level recovery.  The cut is
+                # captured ON the planner's mailbox thread, BETWEEN plans:
+                # blobs saved from this thread would race the plan-ahead
+                # pipeline and silently include pops for steps beyond the
+                # manifest's label (docs/FAULT_TOLERANCE.md runbook).
+                # Actor state rides the differential loader cadence; the
+                # planner slice + ledger commit every manifest_every step.
+                with tel.span("recovery.commit_manifest", step=step):
+                    include = step % max(self.cfg.loader_ckpt_every,
+                                         1) == 0
+                    epoch = None
+                    try:
+                        cut = self.planner.call(
+                            "capture_cut", include, timeout=60,
+                            retry=self.cfg.retry)
+                        epoch = self.store.commit_cut(step, cut)
+                    except Exception:
+                        pass   # planner mid-recovery: next step commits
+                if tel.enabled and epoch is not None:
+                    tel.inc("recovery_manifests_total")
+                    tel.set_gauge("recovery_committed_epoch", float(epoch))
+
+    # ------------------------------------------------------ job recovery
+    def resume(self, store: Optional[CheckpointStore] = None):
+        """Restart the dataloader JOB from the newest consistent on-disk
+        epoch (§6.1 deployment story): acquire the fence (locking any
+        zombie incarnation out of future commits), rebuild the plane with
+        clients deferred, restore planner/loaders/constructors/ledger from
+        the manifest, roll the planner back to the manifest step, replay
+        each loader's plan-history gap, then start clients at the first
+        undelivered step.  Falls back to a cold ``start()`` when no
+        consistent epoch exists."""
+        assert not self._started
+        t0 = time.perf_counter()
+        tel = self.telemetry
+        if store is not None:
+            self.store = store
+        with tel.span("recovery.resume"):
+            token = self.store.acquire_fence()
+            with tel.span("recovery.load_manifest"):
+                man = self.store.latest_manifest()
+            if man is None:
+                self.start()
+                self.resume_report = {
+                    "cold_start": True, "epoch": None, "step": -1,
+                    "fence_token": token, "restored": [], "replayed_steps": 0}
+                return self
+            step = int(man["step"])
+            # R: the recovery line.  ``step`` is the delivery frontier
+            # (last completed train step); ``frontier`` is the actor
+            # cut's plan frontier.  Steps in (step, R] are served from
+            # the restored constructor views — their samples were popped
+            # from the loader buffers before the cut, so they cannot be
+            # replanned, only restored.  Steps beyond R are replanned
+            # deterministically from the restored buffers.
+            rline = max(step, int(man.get("frontier", step)))
+            self.store.adopt_cut(man)
+            self.start(spawn_clients=False)
+            restored = []
+            with tel.span("recovery.restore", step=step,
+                          epoch=man["epoch"]):
+                ck = self.store.load_from_manifest(man, "planner")
+                if ck is not None:
+                    self.planner.call("restore_state", ck["state"],
+                                      retry=self.cfg.retry)
+                    restored.append("planner")
+                # discard plan-ahead state beyond the recovery line:
+                # those steps' deposits died with the old process and
+                # will be replanned from the restored buffers
+                self.planner.call("rollback_to", rline,
+                                  retry=self.cfg.retry)
+                loader_since: dict[str, int] = {}
+                for name, h in list(self.loaders.items()):
+                    ck = self.store.load_from_manifest(man, name)
+                    if ck is None:
+                        continue
+                    try:
+                        # perf: serial ok — recovery path, not step path
+                        h.call("restore_state", ck["state"],
+                               retry=self.cfg.retry)
+                        restored.append(name)
+                        loader_since[name] = int(ck["step"])
+                    except Exception:
+                        pass   # fresh loader; replay from -1 still converges
+                for b, h in list(self.constructors.items()):
+                    ck = self.store.load_from_manifest(
+                        man, f"constructor:{b}")
+                    if ck is None:
+                        continue
+                    try:
+                        # perf: serial ok — recovery path, not step path
+                        h.call("restore_state", ck["state"],
+                               retry=self.cfg.retry)
+                        restored.append(f"constructor:{b}")
+                    except Exception:
+                        pass
+                if self.ledger is not None:
+                    snap = self.store.load_ledger(man)
+                    if snap is not None:
+                        self.ledger.restore(snap)
+                        with self._lock:
+                            self._delivered_ids = \
+                                self.ledger.delivered_ids()
+                        restored.append("ledger")
+            replayed = 0
+            with tel.span("recovery.replay", step=step):
+                for name, h in list(self.loaders.items()):
+                    # perf: serial ok — recovery path
+                    since = loader_since.get(name, -1)
+                    self._replay_since(h, name, since)
+                    replayed = max(replayed, rline - since)
+            self._spawn_clients(start_step=step + 1)
+        elapsed = time.perf_counter() - t0
+        if tel.enabled:
+            tel.inc("recovery_resumes_total")
+            tel.set_gauge("recovery_epoch", float(man["epoch"]))
+            tel.set_gauge("recovery_replayed_steps", float(replayed))
+            tel.observe("recovery_resume_seconds", elapsed)
+        self.resume_report = {
+            "cold_start": False, "epoch": man["epoch"], "step": step,
+            "frontier": rline, "fence_token": token, "restored": restored,
+            "replayed_steps": replayed, "resume_s": elapsed}
+        return self
+
+    def simulate_process_death(self):
+        """Abrupt whole-job crash: every actor killed with mail dropped,
+        no supervision callbacks (the supervisor dies with the process),
+        clients torn down.  The only way back is ``resume()`` on a fresh
+        Overlord — exactly the process-death chaos mode's contract."""
+        self.runtime.terminate()
+        for c in self.clients.values():
+            c.close()
+        self.clients.clear()
+        self._started = False
 
     # ------------------------------------------------------ introspection
     def memory_report(self) -> dict:

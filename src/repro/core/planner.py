@@ -403,3 +403,53 @@ class Planner(Actor):
         self._replanned = set()
         self._last_requested = min(self._last_requested,
                                    self._planned_through)
+
+    def capture_cut(self, include_actors: bool = True) -> dict:
+        """One crash-consistent cut of the data plane, taken BETWEEN plan
+        steps on this mailbox thread: prepare/ingest waves are gathered
+        synchronously inside ``_plan_one``, so when this method runs every
+        loader has prepared — and every constructor has ingested — exactly
+        the steps in this planner's history, nothing more.  Blobs cut here
+        can therefore be replayed forward on resume without divergence
+        (the bug a checkpoint taken from the Overlord thread has: the
+        plan-ahead pipeline races it).  ``include_actors=False`` captures
+        the cheap planner+ledger slice only (differential frequency)."""
+        cut = {"frontier": self._planned_through,
+               "planner": self.checkpoint_state(),
+               "actors": {},
+               "ledger": self.ledger.snapshot()
+               if self.ledger is not None else None}
+        if not include_actors:
+            return cut
+        handles = {n: h for n, h in self.loaders.items() if h.alive}
+        handles.update({f"constructor:{b}": h
+                        for b, h in self.constructors.items() if h.alive})
+        if self.fanout:
+            fo = FanOut(telemetry=self.telemetry)
+            for name, h in handles.items():
+                fo.submit(name, h, "checkpoint_state", timeout=30)
+            cut["actors"] = fo.gather()
+        else:
+            for name, h in handles.items():  # perf: serial ok — baseline
+                try:
+                    cut["actors"][name] = h.call("checkpoint_state",
+                                                 timeout=30)
+                except Exception:
+                    continue
+        return cut
+
+    def rollback_to(self, step: int):
+        """Discard plan state beyond ``step`` (job-level resume).  The
+        checkpointed planner may have planned AHEAD of the manifest step
+        (plan-ahead prefetch); those steps' constructor deposits died with
+        the process, and replaying loaders through them would consume
+        buffer samples the deterministic replan needs — so resume rolls
+        the frontier back to the manifest step first and replans forward
+        from the restored buffers."""
+        if step >= self._planned_through:
+            return
+        for s in [s for s in self._history if s > step]:
+            del self._history[s]
+        self._planned_through = step
+        self._last_requested = min(self._last_requested, step)
+        self._replanned = set()

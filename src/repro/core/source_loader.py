@@ -281,6 +281,15 @@ class SourceLoader(Actor):
         }
 
     def restore_state(self, state: dict):
+        # identity guard: a manifest built for another (source, shard)
+        # must not silently seed this loader's cursor (fenced resume maps
+        # states by actor name; a mismatch means the mapping is wrong)
+        if state.get("source", self.source) != self.source \
+                or tuple(state.get("shard", self.shard)) != \
+                tuple(self.shard):
+            raise ValueError(
+                f"checkpoint for {state.get('source')}:{state.get('shard')}"
+                f" offered to loader {self.source}:{self.shard}")
         self._buffer = [dict(r) for r in state["buffer"]]
         self._reader.seek(state["cursor"])
         self._samples_loaded = state["samples_loaded"]

@@ -282,6 +282,20 @@ def test_config_pipelining_knobs():                  # CFG310
     assert "CFG310" in {f.rule for f in rep2.warnings}
 
 
+def test_config_recovery_knobs():                    # CFG311
+    assert lint_overlord_config(good_overlord_cfg()).ok  # true negative
+    rep = lint_overlord_config(good_overlord_cfg(manifest_every=0))
+    assert "CFG311" in {f.rule for f in rep.errors}
+    rep2 = lint_overlord_config(good_overlord_cfg(keep_epochs=0))
+    assert "CFG311" in {f.rule for f in rep2.errors}
+    rep3 = lint_overlord_config(good_overlord_cfg(
+        checkpoint_dir="/tmp/ck", manifest_every=3, loader_ckpt_every=8))
+    assert "CFG311" in {f.rule for f in rep3.warnings}
+    assert lint_overlord_config(good_overlord_cfg(
+        checkpoint_dir="/tmp/ck", manifest_every=4,
+        loader_ckpt_every=8)).ok  # aligned cadences
+
+
 def test_all_shipped_model_configs_clean():          # true negative
     rep = lint_shipped_model_configs()
     assert rep.ok, rep.as_text()
@@ -426,6 +440,61 @@ def test_actor_half_checkpoint_pair():               # ACT505
     """)
     rep = lint_actor_source(src, "half.py")
     assert "ACT505" in {f.rule for f in rep.errors}
+
+
+def test_actor_checkpoint_key_never_restored():      # ACT507
+    src = textwrap.dedent("""
+        from repro.core.actors import Actor
+
+        class Lossy(Actor):
+            def checkpoint_state(self):
+                return {"cursor": self.cursor, "buffer": self.buffer}
+
+            def restore_state(self, state):
+                self.cursor = state["cursor"]
+    """)
+    rep = lint_actor_source(src, "lossy.py")
+    errs = [f for f in rep.errors if f.rule == "ACT507"]
+    assert errs and "'buffer'" in errs[0].message
+
+
+def test_actor_roundtrip_checkpoint_clean():         # ACT507 true negative
+    src = textwrap.dedent("""
+        from repro.core.actors import Actor
+
+        class Full(Actor):
+            def checkpoint_state(self):
+                return {"cursor": self.cursor, "buffer": self.buffer}
+
+            def restore_state(self, state):
+                self.cursor = state["cursor"]
+                self.buffer = list(state.get("buffer", []))
+    """)
+    assert lint_actor_source(src, "full.py").ok
+
+
+def test_actor_wholesale_restore_not_flagged():      # ACT507 opt-out shape
+    src = textwrap.dedent("""
+        from repro.core.actors import Actor
+
+        class Wholesale(Actor):
+            def checkpoint_state(self):
+                return {"cursor": self.cursor, "buffer": self.buffer}
+
+            def restore_state(self, state):
+                self.__dict__.update(state)
+    """)
+    # generic consumption reads every key; nothing provably unread
+    assert lint_actor_source(src, "wholesale.py").ok
+
+
+def test_shipped_actors_roundtrip_clean():           # ACT507 true negative
+    import os
+    from repro.analysis.actor_lint import lint_actor_paths
+    core_dir = os.path.join(os.path.dirname(__file__), os.pardir,
+                            "src", "repro", "core")
+    rep = lint_actor_paths([os.path.abspath(core_dir)])
+    assert "ACT507" not in rules(rep), rep.as_text()
 
 
 BARE_CALL = textwrap.dedent("""

@@ -109,6 +109,35 @@ def test_prefetch_rides_through_planner_outage(source_paths):
         ov.shutdown()
 
 
+def test_second_failure_before_sync_widens_replay(source_paths):
+    """promote() then a SECOND failure of the same source before any
+    sync(): the re-created shadow is unsynced, so its promotion must
+    report synced_step=-1 (replay covers the full history window) rather
+    than inheriting the first shadow's stale synced step."""
+    ov = mk(source_paths, shadows=True, ledger=True)
+    try:
+        run_steps(ov, 0, 4)
+        name = ov.inject_loader_failures(1)[0]
+        time.sleep(0.4)   # supervision promotes the warm shadow
+        promos = [p for p in ov.shadow_mgr.promotions if p["name"] == name]
+        assert len(promos) == 1 and promos[0]["synced_step"] >= 0
+        # the replacement shadow exists but has never been synced
+        assert ov.shadow_mgr.synced_step(name) == -1
+        # same source dies again before any step_done could sync it
+        ov.loaders[name].kill()
+        time.sleep(0.4)
+        run_steps(ov, 4, 8)
+        promos = [p for p in ov.shadow_mgr.promotions if p["name"] == name]
+        assert len(promos) == 2
+        assert promos[1]["synced_step"] == -1   # widened replay window
+        assert ov.loaders[name].alive
+        summary = ov.ledger.verify(strict=True)
+        assert summary["ok"] and summary["lost"] == [] \
+            and summary["duplicates"] == {}
+    finally:
+        ov.shutdown()
+
+
 def test_checkpoint_frequencies_are_differential(source_paths):
     ov = mk(source_paths, shadows=False, planner_ckpt_every=1,
             loader_ckpt_every=4)

@@ -1,0 +1,294 @@
+"""Durable job-level recovery (docs/FAULT_TOLERANCE.md runbook):
+crash-consistent blob framing, epoch manifests, fenced commits, GC
+retention, and Overlord.resume() end-to-end — including deliberate
+corruption with fallback to the previous epoch."""
+import json
+import os
+import pickle
+
+import pytest
+
+from repro.chaos.ledger import DeliveryLedger
+from repro.configs import get_config
+from repro.core import (
+    ClientPlaceTree, Overlord, OverlordConfig, StaticSchedule,
+)
+from repro.core.fault import (
+    CheckpointCorruption, CheckpointStore, frame_blob, unframe_blob,
+)
+from repro.data.cost_models import backbone_cost
+from repro.data.sources import coyo_like_specs, materialize_group
+
+N_SOURCES = 2
+
+
+class FakeHandle:
+    """Just enough of an ActorHandle for CheckpointStore.maybe_save."""
+
+    alive = True
+
+    def __init__(self, state):
+        self.state = state
+
+    def call(self, method, *a, **k):
+        assert method == "checkpoint_state"
+        return self.state
+
+
+@pytest.fixture(scope="module")
+def source_paths(tmp_path_factory):
+    root = tmp_path_factory.mktemp("rec_sources")
+    return materialize_group(coyo_like_specs(N_SOURCES), str(root))
+
+
+def mk(source_paths, start=True, **kw):
+    tree = ClientPlaceTree([("PP", 1), ("DP", 2), ("CP", 1), ("TP", 1)])
+    cfg = get_config("qwen3-8b")
+    sched = StaticSchedule({f"coyo_{i:03d}": 1.0 for i in range(N_SOURCES)})
+    defaults = dict(
+        seq_len=256, rows_per_microbatch=2, n_bins=1,
+        strategy="backbone_balance", shadows=True, ledger=True,
+        loader_ckpt_every=2,
+        strategy_params=dict(costfn=backbone_cost(cfg), broadcast=()))
+    defaults.update(kw)
+    ov = Overlord(source_paths, tree, sched, OverlordConfig(**defaults))
+    return ov.start() if start else ov
+
+
+def run_steps(ov, lo, hi, timeout=30.0):
+    for step in range(lo, hi):
+        for r in range(ov.tree.world):
+            v = ov.get_batch(step, r, timeout=timeout)
+            assert v["role"] in ("data", "metadata", "none")
+        ov.step_done(step)
+
+
+# ------------------------------------------------------------- framing
+def test_frame_blob_roundtrip():
+    payload = pickle.dumps({"step": 7, "state": list(range(100))})
+    assert unframe_blob(frame_blob(payload)) == payload
+
+
+def test_unframe_rejects_truncation_and_bitrot():
+    framed = frame_blob(b"x" * 256)
+    with pytest.raises(CheckpointCorruption, match="truncated"):
+        unframe_blob(framed[:5])              # inside the header
+    with pytest.raises(CheckpointCorruption, match="truncated"):
+        unframe_blob(framed[:-10])            # payload cut short
+    flipped = bytearray(framed)
+    flipped[-1] ^= 0xFF
+    with pytest.raises(CheckpointCorruption, match="checksum"):
+        unframe_blob(bytes(flipped))          # bit rot
+    with pytest.raises(CheckpointCorruption, match="magic"):
+        unframe_blob(b"NOPE" + framed[4:])    # foreign file
+
+
+# ------------------------------------------- restart-shaped store reads
+def test_checkpointed_step_survives_restart(tmp_path):
+    """S1 regression: a fresh process over the same root must size its
+    replay window from the on-disk state, not report -1."""
+    root = str(tmp_path / "ck")
+    st = CheckpointStore(root, loader_every=1)
+    st.maybe_save("loader", "loader:a", 4, FakeHandle({"cursor": 9}))
+    st.commit_manifest(4)
+
+    restarted = CheckpointStore(root, loader_every=1)
+    assert restarted.checkpointed_step("loader:a") == 4
+    out = restarted.load("loader:a")
+    assert out == {"step": 4, "state": {"cursor": 9}}
+
+
+def test_checkpointed_step_from_orphan_blob(tmp_path):
+    """A save that never reached a manifest commit (crash between blob
+    write and manifest rename) is still trusted when NO epoch exists —
+    the blob is self-verifying."""
+    root = str(tmp_path / "ck")
+    st = CheckpointStore(root, loader_every=1)
+    st.maybe_save("loader", "loader:a", 6, FakeHandle({"cursor": 1}))
+    restarted = CheckpointStore(root, loader_every=1)
+    assert restarted.checkpointed_step("loader:a") == 6
+    assert restarted.load("loader:a")["step"] == 6
+
+
+def test_legacy_flat_checkpoint_still_readable(tmp_path):
+    root = str(tmp_path / "ck")
+    os.makedirs(root)
+    with open(os.path.join(root, "planner.ckpt"), "wb") as f:
+        pickle.dump({"step": 3, "state": {"w": 1.0}}, f)
+    st = CheckpointStore(root)
+    assert st.checkpointed_step("planner") == 3
+    assert st.load("planner")["state"] == {"w": 1.0}
+
+
+# ------------------------------------------------- corruption handling
+def test_corrupt_ckpt_is_counted_and_falls_back(tmp_path):
+    """S2 regression: a truncated/corrupt .ckpt must not crash load();
+    it is counted in stats() and the caller falls back."""
+    root = str(tmp_path / "ck")
+    os.makedirs(root)
+    with open(os.path.join(root, "planner.ckpt"), "wb") as f:
+        f.write(b"\x80\x04truncated-pickle")
+    st = CheckpointStore(root)
+    assert st.load("planner") is None          # no raise
+    stats = st.stats()
+    assert stats["load_failures"]["planner"] == 1
+    assert "planner" in stats["last_failure"]
+
+
+def test_corrupted_newest_epoch_falls_back(tmp_path):
+    """Deliberate corruption of the newest epoch's blob: the loader must
+    detect it (checksum) and resume from the previous epoch."""
+    root = str(tmp_path / "ck")
+    st = CheckpointStore(root, loader_every=1)
+    st.maybe_save("loader", "loader:a", 2, FakeHandle({"gen": "old"}))
+    assert st.commit_manifest(2) == 1
+    st.maybe_save("loader", "loader:a", 4, FakeHandle({"gen": "new"}))
+    assert st.commit_manifest(4) == 2
+
+    # bit-rot the epoch-2 blob on disk
+    man2 = json.load(open(os.path.join(root,
+                                       "epoch-00000002.manifest.json")))
+    blob = os.path.join(root, man2["actors"]["loader:a"]["blob"])
+    data = bytearray(open(blob, "rb").read())
+    data[-3] ^= 0xFF
+    open(blob, "wb").write(bytes(data))
+
+    restarted = CheckpointStore(root, loader_every=1)
+    man = restarted.latest_manifest()
+    assert man is not None and man["epoch"] == 1
+    assert restarted.load("loader:a")["state"] == {"gen": "old"}
+    assert restarted.stats()["manifest_fallbacks"] >= 1
+
+
+# ---------------------------------------------------------------- fencing
+def test_fence_blocks_zombie_commits(tmp_path):
+    root = str(tmp_path / "ck")
+    zombie = CheckpointStore(root, loader_every=1)
+    zombie.acquire_fence()
+    zombie.maybe_save("loader", "loader:a", 1, FakeHandle({"v": 1}))
+    assert zombie.commit_manifest(1) == 1
+
+    successor = CheckpointStore(root, loader_every=1)
+    assert successor.acquire_fence() > zombie.fence_token
+
+    # the zombie can no longer publish state: blob writes are skipped,
+    # manifest and cut commits refused, all counted
+    assert zombie.maybe_save("loader", "loader:a", 2,
+                             FakeHandle({"v": 2})) is False
+    assert zombie.commit_manifest(2) is None
+    assert zombie.commit_cut(
+        2, {"frontier": 2, "planner": {"x": 1}, "actors": {},
+            "ledger": None}) is None
+    assert zombie.stats()["fenced_writes"] >= 3
+
+    # the successor commits fine and never sees the zombie's state
+    successor.maybe_save("loader", "loader:a", 3, FakeHandle({"v": 3}))
+    assert successor.commit_manifest(3) == 2
+    fresh = CheckpointStore(root, loader_every=1)
+    assert fresh.load("loader:a")["state"] == {"v": 3}
+    assert fresh.stats()["fenced_writes"] == 0
+
+
+# --------------------------------------------------------------------- GC
+def test_gc_retains_keep_epochs(tmp_path):
+    root = str(tmp_path / "ck")
+    st = CheckpointStore(root, loader_every=1, keep_epochs=2)
+    for s in range(5):
+        st.maybe_save("loader", "loader:a", s, FakeHandle({"s": s}))
+        st.commit_manifest(s)
+    manifests = sorted(fn for fn in os.listdir(root)
+                       if fn.endswith(".manifest.json"))
+    assert manifests == ["epoch-00000004.manifest.json",
+                         "epoch-00000005.manifest.json"]
+    # every retained epoch still fully loads; GC removed older blobs
+    restarted = CheckpointStore(root)
+    assert restarted.latest_manifest()["epoch"] == 5
+    assert restarted.load("loader:a")["state"] == {"s": 4}
+    blobs = os.listdir(os.path.join(root, "blobs"))
+    assert not any("@0." in fn or "@1." in fn or "@2." in fn
+                   for fn in blobs), blobs
+
+
+# -------------------------------------------------------- ledger snapshot
+def test_ledger_snapshot_roundtrip():
+    led = DeliveryLedger()
+    led.record_planned(0, "a/1", "src_a", 0)
+    led.record_planned(0, "a/2", "src_a", 0)
+    led.record_delivered(0, 0, 0, {"a/1"})
+    led.record_delivered(0, 1, 0, {"a/1"})
+    led.record_dropped(0, "a/2", "packing_overflow")
+    led.record_quarantined("a/3", "src_a", "bad_crc")
+    snap = led.snapshot()
+
+    clone = DeliveryLedger()
+    clone.restore(snap)
+    assert clone.snapshot() == snap
+    assert clone.delivered_ids() == {"a/1"}
+    assert clone.verify(strict=False)["ok"] \
+        == led.verify(strict=False)["ok"]
+
+
+# ----------------------------------------------------- overlord end-to-end
+def test_resume_continues_after_process_death(source_paths, tmp_path):
+    kw = dict(checkpoint_dir=str(tmp_path / "job_ck"))
+    ov = mk(source_paths, **kw)
+    run_steps(ov, 0, 6)
+    ov.simulate_process_death()
+
+    ov2 = mk(source_paths, start=False, **kw).resume()
+    try:
+        rep = ov2.resume_report
+        assert rep is not None and not rep["cold_start"]
+        assert rep["epoch"] >= 1
+        assert rep["step"] == 5
+        assert "planner" in rep["restored"] and "ledger" in rep["restored"]
+        run_steps(ov2, rep["step"] + 1, rep["step"] + 5)
+        summary = ov2.ledger.verify(strict=True)
+        assert summary["ok"] and summary["lost"] == [] \
+            and summary["duplicates"] == {}
+        assert ov2.store.stats()["manifests_committed"] > 0
+    finally:
+        ov2.shutdown()
+
+
+def test_resume_with_no_epochs_cold_starts(source_paths, tmp_path):
+    kw = dict(checkpoint_dir=str(tmp_path / "empty_ck"))
+    ov = mk(source_paths, start=False, **kw).resume()
+    try:
+        assert ov.resume_report["cold_start"]
+        run_steps(ov, 0, 2)
+    finally:
+        ov.shutdown()
+
+
+def test_resume_falls_back_past_corrupt_newest_epoch(source_paths,
+                                                     tmp_path):
+    """The acceptance criterion: a deliberately corrupted blob in the
+    newest epoch is detected and resume proceeds from the previous
+    epoch, replaying forward without loss or duplication."""
+    ckdir = str(tmp_path / "cor_ck")
+    kw = dict(checkpoint_dir=ckdir)
+    ov = mk(source_paths, **kw)
+    run_steps(ov, 0, 6)
+    ov.simulate_process_death()
+
+    # corrupt ALL of the newest epoch's planner blob (checksum breaks)
+    files = sorted(fn for fn in os.listdir(ckdir)
+                   if fn.endswith(".manifest.json"))
+    newest = json.load(open(os.path.join(ckdir, files[-1])))
+    blob = os.path.join(ckdir, newest["actors"]["planner"]["blob"])
+    open(blob, "wb").write(b"garbage" * 16)
+
+    ov2 = mk(source_paths, start=False, **kw).resume()
+    try:
+        rep = ov2.resume_report
+        assert not rep["cold_start"]
+        assert rep["epoch"] < newest["epoch"]
+        assert rep["step"] < 5
+        assert ov2.store.stats()["manifest_fallbacks"] >= 1
+        run_steps(ov2, rep["step"] + 1, 8)
+        summary = ov2.ledger.verify(strict=True)
+        assert summary["ok"] and summary["lost"] == [] \
+            and summary["duplicates"] == {}
+    finally:
+        ov2.shutdown()

@@ -54,8 +54,11 @@ def test_resilience_report_schema(overlord):
                         "recoveries"}
     assert set(rep["dlq"]) == {"total", "held", "by_source"}
     assert set(rep["checkpoints"]) == {"saves", "save_failures",
-                                       "last_failure",
-                                       "checkpointed_steps"}
+                                       "load_failures", "last_failure",
+                                       "checkpointed_steps", "epoch",
+                                       "fence_token", "fenced_writes",
+                                       "manifests_committed",
+                                       "manifest_fallbacks"}
     assert set(rep["shadows"]) == {"sync_failures", "synced_steps",
                                    "staleness_steps", "promotions"}
     assert rep["loaders"], "at least one live primary loader expected"
